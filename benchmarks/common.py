@@ -1,0 +1,49 @@
+"""Shared benchmark harness utilities.
+
+Node sizing: the paper's testbed is 8x A100-80GB (one GPU per serving node).
+The v5e equivalent used here is a 2-chip replica (32 GB HBM; llama3-8b
+weights 16 GB -> ~14 GB KV headroom, matching the paper's ~'36 ShareGPT
+requests fill HBM' regime).  All paper comparisons are RELATIVE (x-factors),
+so absolute ms differ from A100 numbers by design — see DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.serving.cost_model import HardwareSpec
+from repro.serving.simulator import ClusterSim
+from repro.traces.sharegpt import ShareGPTTrace
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+PAPER_HW = HardwareSpec(chips_per_replica=2, host_dram=128e9)
+
+
+def run_policy(arch: str, policy: str, *, n_nodes=8, users=256, sessions=None,
+               seed=0, miss=0.0, prefill_heavy=False, priority_frac=0.0,
+               hw=PAPER_HW, max_batch=32, advisory_to_hbm=True):
+    cfg = get_config(arch)
+    sim = ClusterSim(cfg, n_nodes=n_nodes, policy=policy, hw=hw,
+                     max_batch=max_batch, advisory_to_hbm=advisory_to_hbm)
+    trace = ShareGPTTrace(n_users=users,
+                          n_sessions=sessions or max(users * 2, 200),
+                          seed=seed, advisory_miss_rate=miss,
+                          prefill_heavy=prefill_heavy,
+                          priority_frac=priority_frac)
+    t0 = time.time()
+    res = sim.run(trace)
+    res.stats["wall_s"] = time.time() - t0
+    res.stats["advisory_lead_mean"] = (
+        sum(trace.advisory_leads) / max(len(trace.advisory_leads), 1))
+    return res
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def save(name: str, payload: dict) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1))

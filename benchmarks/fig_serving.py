@@ -1,0 +1,117 @@
+"""Paper Figures 12/13 (normalized latency, TTFT, req/s vs concurrent
+users), Figure 14 (load imbalance), Figure 16 (prefill-heavy), Figure 17
+(missing advisories), Figure 18 (prioritization), Figure 15 (agents)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import PAPER_HW, emit, run_policy, save
+from repro.configs import get_config
+from repro.serving.simulator import ClusterSim
+from repro.traces.agents import MetaGPTTrace
+
+POLICIES = ("symphony", "sticky", "stateless")
+LABEL = {"symphony": "SYMPHONY", "sticky": "InferCept(swap)",
+         "stateless": "vLLM(recompute)"}
+
+
+def fig12_13(arch: str, users_list=(64, 256, 1024), quick=False):
+    out = {}
+    for users in users_list:
+        for pol in POLICIES:
+            sessions = min(users * 2, 1024) if quick else users * 2
+            r = run_policy(arch, pol, users=users, sessions=sessions, seed=2)
+            key = f"{users}_{pol}"
+            out[key] = dict(
+                users=users, policy=pol, completed=len(r.completed),
+                norm_latency_ms=r.mean("normalized_latency") * 1e3,
+                ttft_s=r.mean("ttft"), tpot_ms=r.mean("tpot") * 1e3,
+                req_per_s=r.throughput,
+                imbalance=r.load_imbalance(), wall_s=r.stats["wall_s"])
+            emit(f"fig12.{arch}.{users}.{pol}.norm_latency_ms",
+                 out[key]["norm_latency_ms"] * 1e3,
+                 f"tpot={out[key]['tpot_ms']:.2f}ms ttft={out[key]['ttft_s']*1e3:.1f}ms")
+    save(f"fig12_{arch}", out)
+    return out
+
+
+def fig14(arch: str = "llama3-8b", users=256):
+    out = {}
+    for pol in POLICIES:
+        r = run_policy(arch, pol, users=users, sessions=users * 2, seed=3)
+        li = r.load_imbalance()
+        out[pol] = li
+        emit(f"fig14.{pol}.max_over_median", li["ratio"] * 1e6,
+             f"max={li['max']:.1f} med={li['median']:.1f} min={li['min']:.1f}")
+    save("fig14_load_imbalance", out)
+    return out
+
+
+def fig16(arch: str = "llama3-8b", users=256):
+    out = {}
+    for pol in POLICIES:
+        r = run_policy(arch, pol, users=users, sessions=users * 2, seed=4,
+                       prefill_heavy=True)
+        out[pol] = dict(tpot_ms=r.mean("tpot") * 1e3,
+                        norm_ms=r.mean("normalized_latency") * 1e3,
+                        ttft_s=r.mean("ttft"),
+                        throughput=r.throughput,
+                        imbalance=r.load_imbalance()["ratio"])
+        emit(f"fig16.prefill_heavy.{pol}.ttft_ms", out[pol]["ttft_s"] * 1e6,
+             f"imb={out[pol]['imbalance']:.2f}")
+    save("fig16_prefill_heavy", out)
+    return out
+
+
+def fig17(arch: str = "llama3-8b", users=256,
+          miss_rates=(0.0, 0.1, 0.3, 0.5, 1.0)):
+    out = {}
+    for m in miss_rates:
+        r = run_policy(arch, "symphony", users=users, sessions=users * 2,
+                       seed=5, miss=m)
+        stall = sum(e["stall_s"] for e in r.stats["engine"].values())
+        out[str(m)] = dict(tpot_ms=r.mean("tpot") * 1e3,
+                           norm_ms=r.mean("normalized_latency") * 1e3,
+                           ttft_s=r.mean("ttft"), stall_s=stall)
+        emit(f"fig17.miss{int(m*100):03d}.norm_ms",
+             out[str(m)]["norm_ms"] * 1e3, f"stall={stall:.2f}s")
+    base, ten = out["0.0"]["norm_ms"], out.get("0.1", out["0.0"])["norm_ms"]
+    out["degradation_at_10pct"] = (ten - base) / max(base, 1e-9)
+    save("fig17_missing_advisory", out)
+    return out
+
+
+def fig18(arch: str = "llama3-8b", users=256, fracs=(0.1, 0.3, 0.5)):
+    out = {}
+    for frac in fracs:
+        for pol in ("priority", "stateless"):
+            r = run_policy(arch, pol, users=users, sessions=users * 2,
+                           seed=6, priority_frac=frac)
+            hi = [x for x in r.completed if x.priority > 0]
+            lo = [x for x in r.completed if x.priority == 0]
+            tp = lambda rs: (sum(x.tpot for x in rs if x.tpot) /
+                             max(sum(1 for x in rs if x.tpot), 1)) * 1e3
+            out[f"{frac}_{pol}"] = dict(tpot_hi_ms=tp(hi), tpot_lo_ms=tp(lo))
+            emit(f"fig18.p{int(frac*100)}.{pol}.tpot_hi_ms", tp(hi) * 1e3,
+                 f"lo={tp(lo):.2f}ms")
+    save("fig18_priority", out)
+    return out
+
+
+def fig15(arch: str = "llama3-8b", n_projects=24):
+    out = {}
+    for pol, adv in (("symphony", True), ("stateless", False)):
+        cfg = get_config(arch)
+        sim = ClusterSim(cfg, n_nodes=8, policy=pol, hw=PAPER_HW)
+        tr = MetaGPTTrace(n_projects=n_projects, seed=7, advisory=adv)
+        t0 = time.time()
+        r = sim.run(tr)
+        makespan = max((x.finished_at for x in r.completed), default=0.0)
+        out[pol] = dict(makespan_s=makespan, completed=len(r.completed),
+                        norm_ms=r.mean("normalized_latency") * 1e3,
+                        wall_s=time.time() - t0)
+        emit(f"fig15.metagpt.{pol}.makespan_s", makespan * 1e6)
+    out["speedup"] = out["stateless"]["makespan_s"] / max(
+        out["symphony"]["makespan_s"], 1e-9)
+    save("fig15_agents", out)
+    return out

@@ -1,0 +1,68 @@
+"""Kernel micro-bench harness.  On CPU the Pallas kernels execute in
+interpret mode, so the us_per_call column is NOT TPU performance — the
+derived column carries the analytic VMEM working set + arithmetic intensity
+the roofline uses; on a real TPU the same harness times the compiled kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_kernels():
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.flash_prefill import flash_prefill
+    rng = np.random.default_rng(0)
+    interp = jax.default_backend() != "tpu"
+
+    # paged decode: llama3-8b-like geometry (reduced B for interpret mode)
+    B, H, Hkv, D, page, maxp = 4, 32, 8, 128, 16, 8
+    P = B * maxp + 4
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.bfloat16)
+    kp = jnp.asarray(rng.normal(size=(P, page, Hkv, D)), jnp.bfloat16)
+    vp = jnp.asarray(rng.normal(size=(P, page, Hkv, D)), jnp.bfloat16)
+    tab = jnp.asarray(rng.integers(0, P, (B, maxp)), jnp.int32)
+    ctx = jnp.full((B,), maxp * page, jnp.int32)
+    us = _time(lambda *a: paged_attention(*a, interpret=interp),
+               q, kp, vp, tab, ctx)
+    vmem_kb = (page * D * 2 * 2 + (H // Hkv) * D * (2 + 4 * 3)) / 1024
+    flops = 4 * B * H * D * maxp * page
+    emit("kernel.paged_attention.us", us,
+         f"interpret={interp} vmem_tile={vmem_kb:.0f}KB flops={flops:.2e}")
+
+    # flash prefill: 64 cached + 64 new
+    Bq, S1, S2 = 2, 64, 64
+    qq = jnp.asarray(rng.normal(size=(Bq, S2, H, D)), jnp.bfloat16)
+    kk = jnp.asarray(rng.normal(size=(Bq, S1 + S2, Hkv, D)), jnp.bfloat16)
+    vv = jnp.asarray(rng.normal(size=(Bq, S1 + S2, Hkv, D)), jnp.bfloat16)
+    us = _time(lambda *a: flash_prefill(*a, q_offset=S1, bq=32, bk=32,
+                                        interpret=interp), qq, kk, vv)
+    emit("kernel.flash_prefill.us", us,
+         f"interpret={interp} continuation 64+64, bq=bk=32")
+
+    # SSD chunk scan: zamba2-like geometry (reduced for interpret mode)
+    from repro.kernels.ssd_scan import ssd_scan
+    B2, S2s, H2, P2, N2 = 2, 256, 4, 32, 16
+    x = jnp.asarray(rng.normal(size=(B2, S2s, H2, P2)), jnp.bfloat16)
+    dA = jnp.asarray(-np.abs(rng.normal(scale=0.1, size=(B2, S2s, H2))),
+                     jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B2, S2s, H2, N2)), jnp.bfloat16)
+    Cm = jnp.asarray(rng.normal(size=(B2, S2s, H2, N2)), jnp.bfloat16)
+    us = _time(lambda *a: ssd_scan(*a, chunk=64, interpret=interp),
+               x, dA, Bm, Cm)
+    emit("kernel.ssd_scan.us", us,
+         f"interpret={interp} S={S2s} chunk=64 state={N2}x{P2} in VMEM")

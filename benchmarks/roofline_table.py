@@ -1,0 +1,14 @@
+"""Roofline rows as benchmark CSV (reads results/dryrun)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.roofline.analysis import all_rows
+
+
+def emit_roofline():
+    rows = all_rows()
+    for r in rows:
+        emit(f"roofline.{r.arch}.{r.shape}.step_s", r.step_s * 1e6,
+             f"bound={r.bottleneck} c={r.compute_s:.4f} m={r.memory_s:.4f} "
+             f"x={r.collective_s:.4f} useful={r.model_flops_ratio:.3f}")
+    return rows

@@ -1,0 +1,58 @@
+"""Benchmark entrypoint: one function per paper table/figure + the roofline
+table.  Prints ``name,us_per_call,derived`` CSV (ratios/fractions are scaled
+by 1e6 into the us column; the derived field says what they mean)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import fig_serving, fig_tokens
+    from benchmarks.roofline_table import emit_roofline
+    from benchmarks.kernel_bench import bench_kernels
+
+    t0 = time.time()
+    sections = {
+        "trace": lambda: fig_tokens.fig4_6_trace_stats(),
+        "fig07": lambda: fig_tokens.fig7_recompute_vs_swap(),
+        "fig08": lambda: fig_tokens.fig8_migration(
+            users=1024 if args.full else 256),
+        "fig12": lambda: fig_serving.fig12_13(
+            "llama3-8b",
+            users_list=(64, 256, 1024) if args.full else (64, 1024),
+            quick=not args.full),
+        "fig13": lambda: fig_serving.fig12_13(
+            "codeqwen1.5-7b",          # MHA kv=32: 4x KV/token, stands in
+            users_list=(64, 256) if args.full else (64,),   # for the 13B-class
+            quick=not args.full),      # memory pressure of paper Fig 13
+        "fig14": lambda: fig_serving.fig14(
+            users=1024 if args.full else 256),
+        "fig15": lambda: fig_serving.fig15(),
+        "fig16": lambda: fig_serving.fig16(),
+        "fig17": lambda: fig_serving.fig17(),
+        "fig18": lambda: fig_serving.fig18(
+            fracs=(0.1, 0.3, 0.5) if args.full else (0.1, 0.5)),
+        "roofline": emit_roofline,
+        "kernels": bench_kernels,
+    }
+    for name, fn in sections.items():
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness running
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+    print(f"# total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

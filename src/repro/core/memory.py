@@ -1,0 +1,181 @@
+"""Hierarchical (HBM / host / disk) KV store with the paper's three
+mechanisms:
+
+* layer-granular placement — each session's KV is tracked per layer, so the
+  node manager can stream layers asynchronously and start decoding as soon
+  as layer 0 is resident (SS3.3 "layer-wise asynchronous reading/writing");
+* priority-based placement — earlier layers have higher placement priority
+  (needed first; later layers' fetch hides behind the forward pass);
+  eviction order is the reverse: later layers first, then smallest sessions
+  (SS3.3 "Priority-Based K,V Cache");
+* cooperative memory management — the serving engine may purge prefetched
+  HBM blocks at zero cost because one complete copy always lives on the
+  slowest tier (SS3.3; `ensure_persistent` + `evict_hbm_to_fit`).
+
+Accounting is in bytes and layer units; the actual tensors (real mode) live
+in the owning runtime keyed by (session, layer) — this class is pure
+bookkeeping, shared verbatim by the simulator and the real engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+HBM, HOST, DISK = "hbm", "host", "disk"
+TIER_ORDER = (HBM, HOST, DISK)
+
+
+@dataclass
+class KVEntry:
+    session_id: str
+    n_tokens: int
+    bytes_per_layer: int
+    n_layers: int
+    # tier[l] = where layer l currently is (highest tier holding it)
+    tier: List[str] = field(default_factory=list)
+    on_disk: bool = False          # a complete persistent copy exists
+    pinned: bool = False           # in active use by the engine (not evictable)
+    priority: int = 0
+
+    def __post_init__(self):
+        if not self.tier:
+            self.tier = [HOST] * self.n_layers
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_per_layer * self.n_layers
+
+    def layers_in(self, tier: str) -> List[int]:
+        return [l for l, t in enumerate(self.tier) if t == tier]
+
+
+class TieredKVStore:
+    def __init__(self, hbm_budget: int, host_budget: int,
+                 disk_budget: int = 1 << 50):
+        self.budget = {HBM: hbm_budget, HOST: host_budget, DISK: disk_budget}
+        self.used = {HBM: 0, HOST: 0, DISK: 0}
+        self.entries: Dict[str, KVEntry] = {}
+
+    # -- admission -------------------------------------------------------------
+
+    def admit(self, session_id: str, n_tokens: int, bytes_per_layer: int,
+              n_layers: int, tier: str = HOST, priority: int = 0,
+              on_disk: bool = False) -> KVEntry:
+        assert session_id not in self.entries
+        e = KVEntry(session_id, n_tokens, bytes_per_layer, n_layers,
+                    tier=[tier] * n_layers, priority=priority, on_disk=on_disk)
+        self.entries[session_id] = e
+        self.used[tier] += e.total_bytes
+        if on_disk:
+            self.used[DISK] += e.total_bytes
+        return e
+
+    def drop(self, session_id: str) -> None:
+        e = self.entries.pop(session_id, None)
+        if e is None:
+            return
+        for l, t in enumerate(e.tier):
+            self.used[t] -= e.bytes_per_layer
+        if e.on_disk:
+            self.used[DISK] -= e.total_bytes
+
+    def grow(self, session_id: str, new_tokens: int,
+             new_bytes_per_layer: int) -> None:
+        """After a turn, the session KV grew; it is resident in HBM."""
+        e = self.entries[session_id]
+        for l, t in enumerate(e.tier):
+            self.used[t] -= e.bytes_per_layer
+        if e.on_disk:
+            self.used[DISK] -= e.total_bytes
+            e.on_disk = False      # disk copy is stale after growth
+        e.n_tokens += new_tokens
+        e.bytes_per_layer = new_bytes_per_layer
+        e.tier = [HBM] * e.n_layers
+        self.used[HBM] += e.total_bytes
+
+    # -- placement -------------------------------------------------------------
+
+    def free(self, tier: str) -> int:
+        return self.budget[tier] - self.used[tier]
+
+    def move_layer(self, session_id: str, layer: int, dst: str) -> int:
+        """Move one layer's KV to a tier; returns bytes moved."""
+        e = self.entries[session_id]
+        src = e.tier[layer]
+        if src == dst:
+            return 0
+        self.used[src] -= e.bytes_per_layer
+        self.used[dst] += e.bytes_per_layer
+        e.tier[layer] = dst
+        return e.bytes_per_layer
+
+    def ensure_persistent(self, session_id: str) -> int:
+        """Background disk write-through; returns bytes written."""
+        e = self.entries[session_id]
+        if e.on_disk:
+            return 0
+        e.on_disk = True
+        self.used[DISK] += e.total_bytes
+        return e.total_bytes
+
+    # -- the paper's priority scheme ---------------------------------------------
+
+    def promotion_plan(self, session_id: str, max_bytes: Optional[int] = None
+                       ) -> List[Tuple[int, str]]:
+        """Layers to promote to HBM, lowest layer first (highest priority),
+        bounded by free HBM (+ optional cap). Returns [(layer, src_tier)]."""
+        e = self.entries[session_id]
+        budget = self.free(HBM) if max_bytes is None else min(
+            self.free(HBM), max_bytes)
+        plan = []
+        for l in range(e.n_layers):
+            if e.tier[l] != HBM and budget >= e.bytes_per_layer:
+                plan.append((l, e.tier[l]))
+                budget -= e.bytes_per_layer
+        return plan
+
+    def evict_hbm_to_fit(self, bytes_needed: int,
+                         protect: Optional[set] = None) -> List[Tuple[str, int]]:
+        """Cooperative memory management: free HBM by demoting prefetched
+        blocks.  Eviction order: *later layers first* across victim sessions,
+        then smallest sessions first (paper SS3.3).  Blocks whose session has a
+        persistent copy are dropped for free; others demote to host.
+        Returns [(session, layer)] evicted."""
+        protect = protect or set()
+        victims = [e for e in self.entries.values()
+                   if not e.pinned and e.session_id not in protect]
+        # smallest sessions get *second*-lowest priority => evict them after
+        # later-layer blocks of all sessions; implement as sort key
+        blocks = []
+        for e in victims:
+            for l in e.layers_in(HBM):
+                # higher key = evicted earlier: later layer, then smaller size
+                blocks.append(((l / e.n_layers, -e.total_bytes), e.session_id, l))
+        blocks.sort(key=lambda b: b[0], reverse=True)
+        evicted = []
+        freed = 0
+        for _, sid, l in blocks:
+            if freed >= bytes_needed:
+                break
+            e = self.entries[sid]
+            dst = HOST if not e.on_disk and self.free(HOST) > e.bytes_per_layer \
+                else (HOST if self.free(HOST) > e.bytes_per_layer else DISK)
+            freed += self.move_layer(sid, l, dst)
+            evicted.append((sid, l))
+        return evicted
+
+    # -- queries -----------------------------------------------------------------
+
+    def hbm_resident_layers(self, session_id: str) -> int:
+        e = self.entries.get(session_id)
+        if e is None:
+            return 0
+        return sum(1 for t in e.tier if t == HBM)
+
+    def lowest_tier(self, session_id: str) -> str:
+        e = self.entries[session_id]
+        worst = HBM
+        for t in e.tier:
+            if TIER_ORDER.index(t) > TIER_ORDER.index(worst):
+                worst = t
+        return worst

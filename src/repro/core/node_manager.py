@@ -1,0 +1,181 @@
+"""SYMPHONY node manager (paper SS3.2-3.3): owns the node's tiered KV store,
+prefetches on advisories (peer migration + layer-priority HBM promotion),
+answers peer fetch requests, and exposes the cooperative-memory hook the
+serving engine calls under HBM pressure.
+
+All timing flows through simulated per-channel queues (h2d / disk / peer),
+so migrations serialize realistically and the engine can ask "how much
+critical-path stall remains for session X at time T?" — with advisories
+the answer is usually zero (the paper's headline mechanism)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.advisory import AdvisoryRequest
+from repro.core.memory import DISK, HBM, HOST, TieredKVStore
+from repro.serving.cost_model import CostModel
+
+
+@dataclass
+class FetchState:
+    """Per-session in-flight fetch bookkeeping: layer l usable at ready[l]."""
+    ready_at: list = field(default_factory=list)
+
+
+class NodeManager:
+    def __init__(self, node_id: int, cfg, cost: CostModel,
+                 host_budget: Optional[float] = None,
+                 pod_of=lambda node: 0):
+        self.node_id = node_id
+        self.cfg = cfg
+        self.cost = cost
+        self.n_layers = cfg.n_layers
+        self.store = TieredKVStore(
+            hbm_budget=int(cost.hbm_kv_budget()),
+            host_budget=int(host_budget or cost.hw.host_dram))
+        # simulated transfer channels: busy-until timestamps
+        self.chan: Dict[str, float] = {"h2d": 0.0, "peer": 0.0, "disk": 0.0}
+        self.fetches: Dict[str, FetchState] = {}
+        self.pod_of = pod_of
+        self.peers: Dict[int, "NodeManager"] = {}
+        self.stats = dict(prefetches=0, migrations=0, migrated_bytes=0.0,
+                          evictions=0, disk_writes=0)
+
+    def register_peers(self, managers: Dict[int, "NodeManager"]) -> None:
+        self.peers = managers
+
+    # -- channel helper ------------------------------------------------------------
+
+    def _enqueue(self, chan: str, nbytes: float, kind: str, now: float) -> float:
+        start = max(now, self.chan[chan])
+        done = start + self.cost.transfer_time(nbytes, kind)
+        self.chan[chan] = done
+        return done
+
+    # -- advisory path (off the critical path) ---------------------------------------
+
+    def on_advisory(self, adv: AdvisoryRequest, kv_node: Optional[int],
+                    now: float, to_hbm: bool = True) -> None:
+        sid = adv.session_id
+        e = self.store.entries.get(sid)
+        if e is None:
+            if kv_node is None or kv_node == self.node_id:
+                return                       # brand-new session: nothing to move
+            peer = self.peers.get(kv_node)
+            if peer is None or sid not in peer.store.entries:
+                return
+            pe = peer.store.entries[sid]
+            kind = "peer" if self.pod_of(kv_node) == self.pod_of(self.node_id) \
+                else "xpod"
+            # migrate layer-by-layer into host (+ disk write-through)
+            ready = []
+            for l in range(pe.n_layers):
+                done = self._enqueue("peer", pe.bytes_per_layer, kind, now)
+                ready.append(done)
+            peer.store.drop(sid)
+            peer.fetches.pop(sid, None)
+            self.store.admit(sid, pe.n_tokens, pe.bytes_per_layer,
+                             pe.n_layers, tier=HOST, priority=pe.priority)
+            self.fetches[sid] = FetchState(ready_at=ready)
+            self.stats["migrations"] += 1
+            self.stats["migrated_bytes"] += pe.total_bytes
+            self._disk_writethrough(sid, now)
+            e = self.store.entries[sid]
+        if to_hbm:
+            self.promote(sid, now)
+        self.stats["prefetches"] += 1
+
+    def promote(self, sid: str, now: float) -> None:
+        """Greedy cooperative promotion: lower layers first into free HBM."""
+        e = self.store.entries.get(sid)
+        if e is None:
+            return
+        fs = self.fetches.setdefault(
+            sid, FetchState(ready_at=[now] * e.n_layers))
+        for l, src in self.store.promotion_plan(sid):
+            kind = "h2d" if src in (HOST,) else "disk_r"
+            chan = "h2d" if src == HOST else "disk"
+            start = max(now, fs.ready_at[l] if l < len(fs.ready_at) else now)
+            done = self._enqueue(chan, e.bytes_per_layer, kind, start)
+            fs.ready_at[l] = done
+            self.store.move_layer(sid, l, HBM)
+
+    def _disk_writethrough(self, sid: str, now: float) -> None:
+        e = self.store.entries.get(sid)
+        if e is None or e.on_disk:
+            return
+        self._enqueue("disk", e.total_bytes, "disk_w", now)
+        self.store.ensure_persistent(sid)
+        self.stats["disk_writes"] += 1
+
+    # -- critical path: how much stall remains when the request shows up ---------------
+
+    def kv_stall(self, sid: str, now: float, step_time: float) -> float:
+        """Seconds of critical-path stall to begin computing with this
+        session's KV, given layer-wise async reads."""
+        e = self.store.entries.get(sid)
+        if e is None:
+            return 0.0                       # nothing cached: pure prefill
+        fs = self.fetches.get(sid)
+        per_layer = step_time / max(self.n_layers, 1)
+        stall = 0.0
+        fetch_q = 0.0
+        for l in range(e.n_layers):
+            t = e.tier[l]
+            ready = now
+            if fs and l < len(fs.ready_at):
+                ready = max(ready, fs.ready_at[l])
+            if t != HBM:
+                kind = ("h2d", "disk_r")[t == DISK]
+                fetch_q += self.cost.transfer_time(e.bytes_per_layer, kind)
+                ready = max(ready, now + fetch_q)
+            stall = max(stall, ready - (now + l * per_layer))
+        return max(0.0, stall)
+
+    def mark_resident(self, sid: str, n_tokens: int,
+                      bytes_per_layer: float, priority: int = 0) -> None:
+        """After serving, the session's (grown) KV is in HBM on this node."""
+        if sid in self.store.entries:
+            self.store.grow(sid, 0, int(bytes_per_layer))
+            e = self.store.entries[sid]
+            e.n_tokens = n_tokens
+        else:
+            self.store.admit(sid, n_tokens, int(bytes_per_layer),
+                             self.n_layers, tier=HBM, priority=priority)
+        self.fetches.pop(sid, None)
+
+    # -- cooperative memory management ---------------------------------------------------
+
+    def on_memory_pressure(self, bytes_needed: float, now: float,
+                           protect: Optional[set] = None) -> float:
+        evicted = self.store.evict_hbm_to_fit(int(bytes_needed), protect)
+        self.stats["evictions"] += len(evicted)
+        # write-back is free when a persistent copy exists (the invariant);
+        # otherwise the block demotes to host (no copy-out modeled: layer
+        # KV writes stream through the background disk thread)
+        for sid, _l in evicted:
+            self._disk_writethrough(sid, now)
+        return self.store.free(HBM)
+
+    def background_flush(self, now: float) -> None:
+        for sid in list(self.store.entries):
+            self._disk_writethrough(sid, now)
+
+    def drop_session(self, sid: str) -> None:
+        self.store.drop(sid)
+        self.fetches.pop(sid, None)
+
+    # -- fault tolerance -----------------------------------------------------------------
+
+    def crash(self) -> None:
+        """Lose HBM/host tiers; the disk spool survives (recovery path)."""
+        for sid in list(self.store.entries):
+            e = self.store.entries[sid]
+            if not e.on_disk:
+                self.store.drop(sid)
+            else:
+                for l in range(e.n_layers):
+                    self.store.move_layer(sid, l, DISK)
+        self.chan = {k: 0.0 for k in self.chan}
+        self.fetches.clear()

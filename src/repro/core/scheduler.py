@@ -1,0 +1,130 @@
+"""SYMPHONY cluster scheduler: request-level placement driven by advisory
+requests (paper SS3.2).
+
+On an advisory the scheduler (a) picks a target node via the pluggable
+policy, (b) annotates the advisory with the current KV location, (c)
+forwards it to that node's manager (which migrates/prefetches off the
+critical path), and (d) updates the location map.  The later inference
+request routes to the prepared node.  Baselines (vLLM-recompute, InferCept
+sticky) are the same scheduler with different policies — see policies.py.
+
+Straggler mitigation: placement uses an EWMA of per-node step latency as a
+tiebreak so slow nodes stop attracting new sessions (free with advisories:
+placement is off the critical path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.advisory import AdvisoryRequest, InferenceRequest, SessionMeta
+from repro.core.policies import Policy
+
+
+@dataclass
+class NodeStats:
+    node_id: int
+    outstanding: int = 0           # queued + running requests
+    sessions: int = 0              # sessions whose KV lives here
+    ewma_step: float = 0.0         # straggler signal (s per decode step)
+    alive: bool = True
+
+    def load_key(self):
+        return (self.outstanding, self.ewma_step, self.node_id)
+
+
+class SymphonyScheduler:
+    def __init__(self, n_nodes: int, policy: Policy):
+        self.nodes = {i: NodeStats(i) for i in range(n_nodes)}
+        self.policy = policy
+        self.sessions: Dict[str, SessionMeta] = {}
+        self.planned: Dict[str, int] = {}      # session -> node chosen at advisory
+        self.node_managers = {}                # wired by the cluster runtime
+
+    # -- wiring ------------------------------------------------------------------
+
+    def register_node_manager(self, node_id: int, mgr) -> None:
+        self.node_managers[node_id] = mgr
+
+    def session(self, sid: str) -> SessionMeta:
+        if sid not in self.sessions:
+            self.sessions[sid] = SessionMeta(sid)
+        return self.sessions[sid]
+
+    # -- events --------------------------------------------------------------------
+
+    def on_advisory(self, adv: AdvisoryRequest, now: float) -> Optional[int]:
+        """Returns the chosen node (None if the policy ignores advisories)."""
+        meta = self.session(adv.session_id)
+        if adv.priority is not None:
+            meta.priority = adv.priority
+        target = self.policy.place(self, meta, advisory=True)
+        if target is None:
+            return None
+        self.planned[adv.session_id] = target
+        mgr = self.node_managers.get(target)
+        if mgr is not None:
+            mgr.on_advisory(adv, kv_node=meta.kv_node, now=now)
+        return target
+
+    def route(self, req: InferenceRequest, now: float) -> int:
+        """Route an inference request; advisory-planned node wins."""
+        meta = self.session(req.session_id)
+        req.priority = max(req.priority, meta.priority)
+        target = self.planned.pop(req.session_id, None)
+        if target is None or not self.nodes[target].alive:
+            target = self.policy.place(self, meta, advisory=False)
+        req.node_id = target
+        # session history length; the engine decides whether it is reusable
+        # KV (symphony/sticky) or redundant recompute work (stateless)
+        req.cached_tokens = meta.total_tokens
+        self.nodes[target].outstanding += 1
+        return target
+
+    def on_request_complete(self, req: InferenceRequest,
+                            new_total_tokens: int) -> None:
+        meta = self.session(req.session_id)
+        node = self.nodes[req.node_id]
+        node.outstanding -= 1
+        meta.total_tokens = new_total_tokens
+        if self.policy.reuses_kv:
+            if meta.kv_node is not None and meta.kv_node != req.node_id \
+                    and meta.kv_node in self.nodes:
+                self.nodes[meta.kv_node].sessions = max(
+                    0, self.nodes[meta.kv_node].sessions - 1)
+            if meta.kv_node != req.node_id:
+                node.sessions += 1
+            meta.kv_node = req.node_id
+        meta.turns += 1
+
+    def end_session(self, sid: str) -> None:
+        meta = self.sessions.pop(sid, None)
+        self.planned.pop(sid, None)
+        if meta and meta.kv_node is not None and meta.kv_node in self.nodes:
+            self.nodes[meta.kv_node].sessions = max(
+                0, self.nodes[meta.kv_node].sessions - 1)
+        if meta and meta.kv_node is not None:
+            mgr = self.node_managers.get(meta.kv_node)
+            if mgr is not None:
+                mgr.drop_session(sid)
+
+    # -- fault tolerance ---------------------------------------------------------------
+
+    def mark_failed(self, node_id: int) -> List[str]:
+        """Node failure: reroute its sessions; KV recovers from the disk tier
+        of the failed node's spool (paper's always-one-copy-on-disk makes the
+        persistent tier the recovery substrate)."""
+        self.nodes[node_id].alive = False
+        orphans = [s.session_id for s in self.sessions.values()
+                   if s.kv_node == node_id]
+        for sid in orphans:
+            self.sessions[sid].kv_node = None     # forces refetch/recompute
+            self.planned.pop(sid, None)
+        return orphans
+
+    def report_step_latency(self, node_id: int, dt: float) -> None:
+        st = self.nodes[node_id]
+        st.ewma_step = 0.8 * st.ewma_step + 0.2 * dt if st.ewma_step else dt
+
+    def live_nodes(self) -> List[NodeStats]:
+        return [n for n in self.nodes.values() if n.alive]

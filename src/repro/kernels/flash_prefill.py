@@ -1,0 +1,101 @@
+"""Causal flash-attention prefill with cached prefix — Pallas TPU kernel.
+
+Multi-turn continuation is SYMPHONY's compute saving: turn t+1 prefills only
+its NEW tokens against the session's cached K/V (q_offset = n_cached), so
+the kernel takes Skv >= Sq and a static q_offset.
+
+Grid: (B, Hkv, q_blocks, k_blocks), k innermost (sequential) with running
+(m, l, acc) in VMEM scratch.  The q block carries all G = H/Hkv grouped
+query heads flattened into MXU rows ((bq*G) x D), k/v tiles are
+(bk x D) — VMEM-resident, hardware-aligned when bq*G and bk are multiples
+of 128.  Fully-masked k blocks are skipped via pl.when (exact causal work,
+unlike the rectangular jnp fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, q_offset: int, bq: int, bk: int, G: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block skip: this k block starts after the last q position
+    q_hi = q_offset + (qi + 1) * bq - 1
+
+    @pl.when(ki * bk <= q_hi)
+    def _compute():
+        q = q_ref[0, 0].reshape(bq * G, -1).astype(jnp.float32)
+        k = k_ref[0, :, 0].astype(jnp.float32)             # (bk, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s / np.sqrt(q.shape[-1])                       # (bq*G, bk)
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = q_offset + qi * bq + rows
+        kpos = ki * bk + cols
+        s = jnp.where(qpos >= kpos, s, -1e30)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * corr + pexp.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.reshape(bq, G, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q_offset", "bq", "bk", "interpret"))
+def flash_prefill(q, k, v, *, q_offset: int = 0, bq: int = 128, bk: int = 128,
+                  interpret: bool = True):
+    """q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D). Returns (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    q5 = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4)  # (B,Hkv,Sq,G,D)
+
+    grid = (B, Hkv, Sq // bq, Skv // bk)
+    kern = functools.partial(_kernel, q_offset=q_offset, bq=bq, bk=bk, G=G)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, G, D), lambda b, h, qi, ki: (b, h, qi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, G, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, D), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq, G, D), q.dtype),
+        interpret=interpret,
+    )(q5, k, v)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, D)

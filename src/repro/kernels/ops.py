@@ -1,0 +1,34 @@
+"""Public jit'd kernel entrypoints with automatic backend dispatch:
+Pallas on TPU (interpret=False), interpret-mode on CPU for validation,
+pure-jnp oracle as the universal fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_prefill as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                    mode: str = "auto"):
+    """mode: auto | pallas | interpret | ref"""
+    if mode == "ref":
+        return ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                       ctx_lens)
+    interpret = not _on_tpu() if mode == "auto" else (mode == "interpret")
+    return _paged(q, k_pages, v_pages, block_tables, ctx_lens,
+                  interpret=interpret)
+
+
+def flash_prefill(q, k, v, q_offset: int = 0, mode: str = "auto",
+                  bq: int = 128, bk: int = 128):
+    if mode == "ref":
+        return ref.flash_prefill_ref(q, k, v, q_offset)
+    interpret = not _on_tpu() if mode == "auto" else (mode == "interpret")
+    return _flash(q, k, v, q_offset=q_offset, bq=bq, bk=bk,
+                  interpret=interpret)

@@ -1,0 +1,111 @@
+"""Paged decode attention — Pallas TPU kernel with block-table indirection.
+
+The page pool lives in HBM; the grid walks (batch, kv_head, page) with the
+page dimension innermost (sequential on a TPU core).  Block tables and
+context lengths ride in scalar-prefetch SMEM so each page's DMA source
+address is computed *before* the step — the TPU analogue of vLLM's
+PagedAttention gather, reshaped for VMEM/MXU:
+
+  * one (page_size x D) K tile + V tile per grid step, resident in VMEM;
+  * flash-decoding style running (m, l, acc) accumulators in VMEM scratch
+    carried across the page dimension;
+  * GQA: the q block holds all G = H/Hkv query heads of one kv head, so the
+    MXU contraction is (G x D) @ (D x page_size).
+
+Pages are the unit SYMPHONY migrates between tiers/nodes, so serving decode
+reads KV exactly in the layout the node manager stores it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ctx_ref, tables_ref,          # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref,          # VMEM blocks
+            o_ref,                        # output block
+            m_ref, l_ref, acc_ref):       # VMEM scratch
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+    page = k_ref.shape[1]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[b]
+    start = p * page
+    valid = ctx - start                     # tokens valid in this page
+
+    @pl.when(valid > 0)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)             # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s / np.sqrt(q.shape[-1])                       # (G, page)
+        idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(idx < valid, s, -1e30)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)          # (G, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * corr + pexp.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                    *, interpret: bool = True):
+    """q: (B,H,D); k/v_pages: (P,page,Hkv,D); block_tables: (B,maxp);
+    ctx_lens: (B,). Returns (B,H,D)."""
+    B, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    maxp = block_tables.shape[1]
+    q4 = q.reshape(B, Hkv, G, D)
+
+    grid = (B, Hkv, maxp)
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, D),
+        lambda b, h, p, ctx, tab: (tab[b, p], 0, h, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, p, ctx, tab: (b, h, 0, 0)),
+            kv_spec, kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, p, ctx, tab: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(ctx_lens, block_tables, q4, k_pages, v_pages)
+    return out.reshape(B, H, D)

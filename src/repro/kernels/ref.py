@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens):
+    """Decode attention over paged KV.
+
+    q:            (B, H, D)
+    k/v_pages:    (P, page_size, Hkv, D)  — global page pool
+    block_tables: (B, max_pages) int32    — page ids per sequence
+    ctx_lens:     (B,) int32              — valid tokens per sequence
+    returns:      (B, H, D)
+    """
+    B, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    maxp = block_tables.shape[1]
+    S = maxp * page
+
+    # gather each sequence's pages into dense (B, S, Hkv, D)
+    k = k_pages[block_tables].reshape(B, S, Hkv, D)
+    v = v_pages[block_tables].reshape(B, S, Hkv, D)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    mask = jnp.arange(S)[None] < ctx_lens[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def flash_prefill_ref(q, k, v, q_offset=0):
+    """Causal attention with cached prefix.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D), Skv >= Sq;
+    q token i sits at absolute position q_offset + i. returns (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) / np.sqrt(D)
+    qpos = q_offset + jnp.arange(Sq)
+    mask = qpos[:, None] >= jnp.arange(Skv)[None, :]
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dA, Bm, Cm):
+    """Sequential SSD/Mamba2 recurrence oracle (token-by-token, fp32).
+
+    x:  (B, S, H, P)   inputs (already dt-scaled)
+    dA: (B, S, H)      per-step log decay (negative)
+    Bm: (B, S, H, N)   input projections  (per-head; caller broadcasts groups)
+    Cm: (B, S, H, N)   output projections
+    returns (y: (B, S, H, P), state: (B, H, N, P))
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((B, H, N, P), jnp.float32)
+    ys = []
+    for t in range(S):
+        h = (h * jnp.exp(dA[:, t]).astype(jnp.float32)[..., None, None]
+             + jnp.einsum("bhn,bhp->bhnp", Bm[:, t].astype(jnp.float32),
+                          x[:, t].astype(jnp.float32)))
+        ys.append(jnp.einsum("bhn,bhnp->bhp", Cm[:, t].astype(jnp.float32), h))
+    return jnp.stack(ys, axis=1), h

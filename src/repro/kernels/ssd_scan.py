@@ -1,0 +1,90 @@
+"""Mamba2/SSD chunked scan — Pallas TPU kernel (zamba2's compute hot path).
+
+Grid walks (batch, head, chunk) with the chunk dimension innermost
+(sequential on a TPU core); the (N x P) SSM state lives in VMEM scratch and
+carries across chunks — the HBM traffic per chunk is exactly the chunk's
+x/B/C tiles plus the y tile, with the O(Q^2) decay/score intermediates never
+leaving VMEM (the pure-jnp path materializes them per chunk, which is most
+of zamba2's train memory term).
+
+Per chunk (the ssd_minimal algorithm, fp32 in-register):
+  cs      = cumsum(dA)                       (Q,)
+  Y_diag  = ((C B^T) o exp(cs_i - cs_j) tril) (x)
+  Y_off   = (C h_prev) o exp(cs)
+  h_next  = exp(cs_Q) h_prev + B^T ((exp(cs_Q - cs) o x))
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, h_ref):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)          # (Q, P)
+    da = da_ref[0, 0, 0].astype(jnp.float32)        # (Q,)
+    Bm = b_ref[0, 0, 0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0, 0, 0].astype(jnp.float32)         # (Q, N)
+    Q = x.shape[0]
+
+    cs = jnp.cumsum(da)                          # (Q,)
+    seg = cs[:, None] - cs[None, :]              # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    seg = jnp.where(ii >= jj, seg, -1e30)
+    Ldec = jnp.exp(seg)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    y = jax.lax.dot_general(cb * Ldec, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+    h = h_ref[...]
+    y += jax.lax.dot_general(Cm, h, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) \
+        * jnp.exp(cs)[:, None]
+    # state update
+    w = jnp.exp(cs[-1] - cs)[:, None]            # (Q, 1)
+    h_ref[...] = (h * jnp.exp(cs[-1])
+                  + jax.lax.dot_general(Bm * w, x, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dA, Bm, Cm, *, chunk: int = 64, interpret: bool = True):
+    """x: (B,S,H,P); dA: (B,S,H); Bm/Cm: (B,S,H,N). Returns y (B,S,H,P)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    # explicit layouts: (B, H, nc, Q[, feat])
+    x4 = x.reshape(B, nc, Q, H, P).transpose(0, 3, 1, 2, 4)
+    da3 = dA.reshape(B, nc, Q, H).transpose(0, 3, 1, 2)
+    b4 = Bm.reshape(B, nc, Q, H, N).transpose(0, 3, 1, 2, 4)
+    c4 = Cm.reshape(B, nc, Q, H, N).transpose(0, 3, 1, 2, 4)
+
+    grid = (B, H, nc)
+    y = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, Q, P), x.dtype),
+        interpret=interpret,
+    )(x4, da3, b4, c4)
+    return y.transpose(0, 2, 3, 1, 4).reshape(B, S, H, P)

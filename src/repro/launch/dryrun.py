@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("REPRO_ACCUM_MODE", "preferred")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * jax.jit(step).lower(**input_specs).compile() must succeed on the 16x16
+    single-pod mesh AND the 2x16x16 multi-pod mesh for every cell;
+  * memory_analysis() proves the working set fits 16 GB/chip (v5e);
+  * cost_analysis() + the while-aware HLO parser feed EXPERIMENTS.md
+    SS Dry-run / SS Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape decode_32k --mesh single
+  python -m repro.launch.dryrun --all          # every cell, subprocess each
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config, SHAPES_BY_NAME, shapes_for
+    from repro.distributed.sharding import ShardingPlan
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.registry import get_model
+    from repro.roofline.hlo_cost import analyze_text
+    from repro.training.optimizer import adamw_init, make_train_step
+
+    cfg = get_config(arch)
+    cell = SHAPES_BY_NAME[shape]
+    if cell not in shapes_for(cfg):
+        res = dict(arch=arch, shape=shape, mesh=mesh_kind, skipped=True,
+                   reason="long_500k needs sub-quadratic attention; "
+                          "skipped for pure full-attention archs (DESIGN.md)")
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape}__{mesh_kind}.json").write_text(
+            json.dumps(res, indent=1))
+        return res
+    model = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    plan = ShardingPlan(cfg, mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    specs = model.input_specs(cell)
+    abstract_params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    p_specs = plan.params_specs(abstract_params)
+    p_shard = jax.tree.map(ns, p_specs)
+
+    from repro.distributed import hints
+    dp = plan.dp_axes
+    seq_ok = cell.seq_len % plan.tp == 0
+    hints.set_hints({
+        "logits": ns(P(dp, None, "model")),
+        "act": ns(P(dp, None, None)),
+        # "residual" (Megatron sequence-parallel) is available as a perf
+        # iteration; baseline uses microbatched grad accumulation instead
+        "residual": None,
+        "ssm_heads": ns(P(dp, None, "model", None)),
+        "ssm_gates": ns(P(dp, None, "model")),
+        # ragged-head archs: padded head sharding (GSPMD pads 36 -> 48)
+        "attn_heads": ns(P(dp, None, "model", None)) if (
+            cfg.n_heads % plan.tp != 0) else None,
+    })
+
+    t0 = time.time()
+    if cell.kind == "train":
+        n_micro = {"seamless-m4t-medium": 16, "zamba2-2.7b": 16,
+                   "xlstm-1.3b": 16}.get(arch, 8)
+        step = make_train_step(model, n_microbatches=n_micro)
+        opt_abs = jax.eval_shape(adamw_init, abstract_params)
+        o_specs = dict(
+            mu=jax.tree.map(plan.opt_spec_from_param, p_specs,
+                            jax.tree.map(lambda x: x.shape, abstract_params)),
+            step=P(),
+        )
+        o_specs["nu"] = o_specs["mu"]
+        o_specs["master"] = o_specs["mu"]
+        o_shard = jax.tree.map(ns, o_specs)
+        b_shard = jax.tree.map(lambda x: ns(plan.data_spec(x.shape)), specs)
+        loss_shard = ns(P())
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, loss_shard),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(abstract_params, opt_abs, specs)
+    elif cell.kind == "prefill":
+        if cfg.family == "encdec":
+            args = (specs["frames"], specs["tokens"])
+        elif cfg.family == "vlm":
+            args = (specs["tokens"], specs["patches"])
+        else:
+            args = (specs["tokens"],)
+        out_abs = jax.eval_shape(model.prefill, abstract_params, *args)
+        logits_abs, cache_abs = out_abs
+        c_specs = plan.cache_specs(cache_abs)
+        out_shard = (ns(plan.logits_spec(logits_abs.shape)),
+                     jax.tree.map(ns, c_specs))
+        in_shard = (p_shard,) + tuple(
+            ns(plan.data_spec(a.shape)) for a in args)
+        jitted = jax.jit(model.prefill, in_shardings=in_shard,
+                         out_shardings=out_shard)
+        lowered = jitted.lower(abstract_params, *args)
+    else:  # decode
+        cache_abs = specs["cache"]
+        c_specs = plan.cache_specs(cache_abs)
+        c_shard = jax.tree.map(ns, c_specs)
+        tok_shard = ns(plan.data_spec(specs["tokens"].shape))
+        out_abs = jax.eval_shape(model.decode_step, abstract_params,
+                                 cache_abs, specs["tokens"])
+        logits_abs, _ = out_abs
+        jitted = jax.jit(model.decode_step,
+                         in_shardings=(p_shard, c_shard, tok_shard),
+                         out_shardings=(ns(plan.logits_spec(logits_abs.shape)),
+                                        c_shard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(abstract_params, cache_abs, specs["tokens"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = dict(
+        argument_gb=ma.argument_size_in_bytes / 1e9,
+        output_gb=ma.output_size_in_bytes / 1e9,
+        temp_gb=ma.temp_size_in_bytes / 1e9,
+        code_gb=getattr(ma, "generated_code_size_in_bytes", 0) / 1e9,
+    )
+    mem["total_gb"] = mem["argument_gb"] + mem["temp_gb"]
+    # XLA:CPU cannot alias donated buffers, so temp holds a full copy of the
+    # donated cache/params that XLA:TPU aliases in place — subtract it
+    donated = mem["output_gb"] if cell.kind in ("train", "decode") else 0.0
+    mem["total_donated_gb"] = max(mem["total_gb"] - donated,
+                                  mem["argument_gb"])
+    ca = compiled.cost_analysis() or {}
+    t0 = time.time()
+    parsed = analyze_text(compiled.as_text())
+    t_parse = time.time() - t0
+
+    n_params = model.param_count()
+    n_active = model.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 6 * n_active * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = cell.global_batch
+        model_flops = 2 * n_active * tokens
+
+    n_dev = 512 if mesh_kind == "multi" else 256
+    res = dict(
+        arch=arch, shape=shape, mesh=mesh_kind, ok=True,
+        n_devices=n_dev,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        parse_s=round(t_parse, 2),
+        memory=mem,
+        fits_hbm_16gb=mem["total_donated_gb"] <= 16.0,
+        xla_cost=dict(flops=ca.get("flops"),
+                      bytes_accessed=ca.get("bytes accessed")),
+        parsed=parsed.to_json(),
+        model_flops_global=model_flops,
+        params=n_params, active_params=n_active,
+    )
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape}__{mesh_kind}.json").write_text(
+        json.dumps(res, indent=1))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--missing-only", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    if args.all:
+        from repro.configs import ARCHS, ALL_SHAPES
+        cells = [(a, s.name, m) for a in sorted(ARCHS)
+                 for s in ALL_SHAPES for m in ("single", "multi")]
+        t_start = time.time()
+        n_ok = n_fail = 0
+        for arch, shape, mesh_kind in cells:
+            tgt = out_dir / f"{arch}__{shape}__{mesh_kind}.json"
+            if args.missing_only and tgt.exists():
+                prev = json.loads(tgt.read_text())
+                if prev.get("ok") or prev.get("skipped"):
+                    continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                   "--out", str(out_dir)]
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=1800)
+            ok = r.returncode == 0
+            n_ok += ok
+            n_fail += (not ok)
+            print(f"[{time.time()-t_start:7.0f}s] {arch:22s} {shape:12s} "
+                  f"{mesh_kind:6s} {'OK' if ok else 'FAIL'} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+            if not ok:
+                err = (r.stderr or "")[-2000:]
+                tgt.write_text(json.dumps(dict(
+                    arch=arch, shape=shape, mesh=mesh_kind, ok=False,
+                    error=err), indent=1))
+                print(err[-800:], flush=True)
+        print(f"done: {n_ok} ok, {n_fail} fail")
+        return
+
+    try:
+        res = run_cell(args.arch, args.shape, args.mesh, out_dir)
+        print(json.dumps(res, indent=1))
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

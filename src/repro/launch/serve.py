@@ -1,0 +1,44 @@
+"""Serving launcher: simulated cluster (paper-scale) or real tiny-model
+cluster on CPU.
+
+  python -m repro.launch.serve --arch llama3-8b --policy symphony \
+      --nodes 8 --users 256                    # simulation
+  python -m repro.launch.serve --real           # tiny model, real tokens
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--policy", default="symphony",
+                    choices=["symphony", "sticky", "stateless", "priority"])
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--users", type=int, default=256)
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--miss", type=float, default=0.0)
+    ap.add_argument("--real", action="store_true")
+    args = ap.parse_args()
+
+    if args.real:
+        from examples.serve_cluster import main as real_main
+        real_main()
+        return
+
+    from benchmarks.common import run_policy
+    r = run_policy(args.arch, args.policy, n_nodes=args.nodes,
+                   users=args.users, sessions=args.sessions, miss=args.miss)
+    li = r.load_imbalance()
+    print(json.dumps(dict(
+        policy=args.policy, completed=len(r.completed),
+        normalized_latency_ms=r.mean("normalized_latency") * 1e3,
+        ttft_s=r.mean("ttft"), tpot_ms=r.mean("tpot") * 1e3,
+        req_per_s=r.throughput, load_imbalance=li,
+        advisory_lead_s=r.stats["advisory_lead_mean"]), indent=1))
+
+
+if __name__ == "__main__":
+    main()

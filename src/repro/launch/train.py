@@ -1,0 +1,39 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+--smoke runs the reduced config on CPU (a few hundred steps of a ~tiny
+model); on TPU hardware the same entrypoint shards the full config over the
+production mesh via the ShardingPlan.  Restarting the command after a crash
+resumes from the latest complete checkpoint (see training/checkpoint.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+    from repro.training.data import DataConfig
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = get_model(cfg)
+    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                    global_batch=args.batch)
+    train(model, cfg, tc, dc)
+
+
+if __name__ == "__main__":
+    main()

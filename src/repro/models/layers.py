@@ -1,0 +1,296 @@
+"""Shared model layers: norms, RoPE, chunked flash attention, MLPs.
+
+All attention here is pure-jnp and shape-static (XLA/TPU friendly).  The
+prefill/train path uses a double-chunked flash attention (never materializes
+S x S); the decode path is a single-query attention over the full cache.
+The Pallas kernels in ``repro.kernels`` implement the same math for the TPU
+hot path and are validated against these as oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _accum_mode() -> str:
+    """'preferred': TPU-faithful bf16xbf16->f32 dots (compile-only on CPU —
+    the CPU thunk runtime cannot execute them).  'cast': f32-cast operands,
+    executable everywhere.  The dry-run sets REPRO_ACCUM_MODE=preferred."""
+    import os
+    mode = os.environ.get("REPRO_ACCUM_MODE")
+    if mode:
+        return mode
+    return "cast" if jax.default_backend() == "cpu" else "preferred"
+
+
+def einsum32(spec, *ops):
+    """einsum with fp32 accumulation (see _accum_mode)."""
+    if _accum_mode() == "preferred":
+        return jnp.einsum(spec, *ops, preferred_element_type=jnp.float32)
+    return jnp.einsum(spec, *[o.astype(jnp.float32) for o in ops])
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked, pure jnp)
+# ---------------------------------------------------------------------------
+
+def _chunks(n, c):
+    assert n % c == 0, (n, c)
+    return n // c
+
+
+def flash_attention_triangular(q, k, v, *, chunk: int = 512):
+    """Exact-causal flash attention: one scan over the T(T+1)/2 lower-
+    triangular (q_block, k_block) pairs — upper-triangle blocks are never
+    computed or streamed (the rectangular path masks them, paying ~2x the
+    causal-minimum attention FLOPs and HBM traffic; SSPerf it.9).
+
+    q: (B, S, H, D); k/v: (B, S, Hkv, D). Output written once per q block
+    at its diagonal step via lax.cond (write branch is tiny)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    C = min(chunk, S)
+    assert S % C == 0
+    n = S // C
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+
+    qi_list, ki_list = [], []
+    for qi in range(n):
+        for ki in range(qi + 1):
+            qi_list.append(qi)
+            ki_list.append(ki)
+    pairs = (jnp.asarray(qi_list, jnp.int32), jnp.asarray(ki_list, jnp.int32))
+
+    def step(carry, qk):
+        qi, ki = qk
+        m, l, acc, out = carry
+        fresh = ki == 0                       # new q row: reset accumulators
+        m = jnp.where(fresh, jnp.full_like(m, NEG_INF), m)
+        l = jnp.where(fresh, jnp.zeros_like(l), l)
+        acc = jnp.where(fresh, jnp.zeros_like(acc), acc)
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * C, C, axis=3)
+        kc = jax.lax.dynamic_slice_in_dim(kg, ki * C, C, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(vg, ki * C, C, axis=2)
+        s = einsum32("bhgqd,bhkd->bhgqk", qc, kc) * scale
+        # the mask only bites on the diagonal block
+        rel = ((qi * C + jnp.arange(C))[:, None]
+               >= (ki * C + jnp.arange(C))[None, :])
+        s = jnp.where(rel[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + einsum32(
+            "bhgqk,bhkd->bhgqd", p.astype(vc.dtype), vc)
+        m = m_new
+
+        def write(o):
+            blk = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(o.dtype)
+            return jax.lax.dynamic_update_slice_in_dim(o, blk, qi * C, axis=3)
+        out = jax.lax.cond(ki == qi, write, lambda o: o, out)
+        return (m, l, acc, out), None
+
+    m0 = jnp.full((B, Hkv, G, C), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, C), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, C, D), jnp.float32)
+    o0 = jnp.zeros((B, Hkv, G, S, D), q.dtype)
+    (_, _, _, out), _ = jax.lax.scan(step, (m0, l0, a0, o0), pairs)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset=0,
+                    window: Optional[int] = None, chunk_q: int = 512,
+                    chunk_k: int = 512, kv_len=None):
+    """Chunked softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D) with H % Hkv == 0.
+    ``q_offset``: absolute position of q[0] relative to k[0] (cached-prefix
+    append prefill: q_offset = n_cached).  ``window``: sliding-window size.
+    ``kv_len``: optional (B,) valid kv lengths (positions >= kv_len masked).
+    Never materializes more than (chunk_q x chunk_k) scores per (B, H).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    if (causal and Sq == Sk and window is None and kv_len is None
+            and isinstance(q_offset, int) and q_offset == 0 and Sq > chunk_q):
+        return flash_attention_triangular(q, k, v, chunk=chunk_q)
+    G = H // Hkv
+    chunk_q = min(chunk_q, Sq)
+    chunk_k = min(chunk_k, Sk)
+    nq, nk = _chunks(Sq, chunk_q), _chunks(Sk, chunk_k)
+    scale = 1.0 / np.sqrt(D)
+
+    # reshape to grouped heads: (B, Hkv, G, S, D)
+    qg = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)                        # (B, Hkv, Sk, D)
+    vg = v.transpose(0, 2, 1, 3)
+
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+
+    def q_block(qi, carry_unused):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * chunk_q, chunk_q, axis=3)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, qi * chunk_q, chunk_q)
+
+        def k_block(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(kg, ki * chunk_k, chunk_k, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(vg, ki * chunk_k, chunk_k, axis=2)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, ki * chunk_k, chunk_k)
+            s = einsum32("bhgqd,bhkd->bhgqk", qc, kc) * scale
+            mask = jnp.ones((chunk_q, chunk_k), bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window is not None:
+                mask &= qp[:, None] - kp[None, :] < window
+            if kv_len is not None:
+                s = jnp.where(kp[None, None, None, None, :]
+                              < kv_len[:, None, None, None, None], s, NEG_INF)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + einsum32("bhgqk,bhkd->bhgqd", p.astype(vc.dtype), vc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, chunk_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, chunk_q, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry_unused, out
+
+    _, blocks = jax.lax.scan(q_block, 0, jnp.arange(nq))
+    # blocks: (nq, B, Hkv, G, chunk_q, D) -> (B, Sq, H, D)
+    out = blocks.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, G, Sq, D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None, layout: str = "bshd"):
+    """Single-position attention over a (possibly padded) cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S, Hkv, D) for layout="bshd" or
+    (B, Hkv, S, D) for layout="bhsd" (head-major: per-head (S, D) tiles are
+    contiguous — no transpose-copies on the decode read path, SSPerf it.3);
+    cache_len: (B,) valid entries *including* the current token's KV.
+    """
+    B, _, H, D = q.shape
+    if layout == "bhsd":
+        Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    else:
+        S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    if layout == "bhsd":
+        s = einsum32("bhgd,bhsd->bhgs", qg, k_cache) * scale
+    else:
+        s = einsum32("bhgd,bshd->bhgs", qg, k_cache) * scale
+    pos = jnp.arange(S)
+    mask = pos[None, :] < cache_len[:, None]
+    if window is not None:
+        mask &= pos[None, :] >= cache_len[:, None] - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if layout == "bhsd":
+        o = einsum32("bhgs,bhsd->bhgd", p.astype(v_cache.dtype), v_cache)
+    else:
+        o = einsum32("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    return jax.nn.gelu(x @ w1 + b1) @ w2 + b2
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """logits: (..., V) fp32; labels int32. Returns mean over masked tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def stacked(keys_fn, n, init_fn):
+    """Initialize n stacked layer params: init_fn(key) for each layer."""
+    return jax.vmap(init_fn)(keys_fn(n))

@@ -1,0 +1,350 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) backbone + shared attention blocks.
+
+Structure (see configs/zamba2_2_7b.py): ``n_layers`` Mamba2 layers organized
+in groups of ``shared_every``; before each group a *shared* attention+MLP
+block runs (parameters shared across applications, alternating between
+``n_shared_blocks`` parameter sets — Zamba2's ABAB pattern).  The shared
+blocks use a sliding window at long context (sub-quadratic; DESIGN.md §6).
+
+SSD scan follows the chunked algorithm of Mamba-2 (arXiv:2405.21060),
+computed in fp32, scanned over chunks (trip-count visible to the roofline
+parser).  Simplifications vs the HF checkpoint, documented in DESIGN.md:
+separate (wz,wxbc,wdt) projections instead of one fused in_proj; shared
+block attends over x (no concat-with-embedding LoRA adapters).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed import hints
+from repro.models import layers as L
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        s = cfg.ssm
+        self.d_inner = s.expand * cfg.d_model
+        self.nh = self.d_inner // s.head_dim          # SSD heads
+        self.conv_dim = self.d_inner + 2 * s.n_groups * s.d_state
+        assert cfg.n_layers % cfg.shared_every == 0
+        self.n_groups_outer = cfg.n_layers // cfg.shared_every
+
+    # -- params --------------------------------------------------------------
+
+    def init(self, rng) -> Dict:
+        c, dt = self.cfg, self.dtype
+        s = c.ssm
+        nl, ng = c.n_layers, self.n_groups_outer
+        ks = jax.random.split(rng, 24)
+
+        def stack(key, shape, scale=None, n=nl):
+            return L.dense_init(key, (n,) + shape, dt, scale)
+
+        mamba = dict(
+            ln=jnp.ones((nl, c.d_model), dt),
+            wz=stack(ks[0], (c.d_model, self.d_inner)),
+            wxbc=stack(ks[1], (c.d_model, self.conv_dim)),
+            wdt=stack(ks[2], (c.d_model, self.nh)),
+            conv_w=stack(ks[3], (self.conv_dim, s.d_conv), 0.2),
+            a_log=jnp.tile(jnp.log(jnp.arange(1, self.nh + 1, dtype=jnp.float32))[None],
+                           (nl, 1)),
+            dt_bias=jnp.zeros((nl, self.nh), jnp.float32),
+            d_skip=jnp.ones((nl, self.nh), jnp.float32),
+            norm=jnp.ones((nl, self.d_inner), dt),
+            wout=stack(ks[4], (self.d_inner, c.d_model)),
+        )
+        nb = c.n_shared_blocks
+        shared = dict(
+            ln1=jnp.ones((nb, c.d_model), dt),
+            ln2=jnp.ones((nb, c.d_model), dt),
+            wq=stack(ks[5], (c.d_model, c.q_dim), n=nb),
+            wk=stack(ks[6], (c.d_model, c.kv_dim), n=nb),
+            wv=stack(ks[7], (c.d_model, c.kv_dim), n=nb),
+            wo=stack(ks[8], (c.q_dim, c.d_model), n=nb),
+            w1=stack(ks[9], (c.d_model, c.d_ff), n=nb),
+            w3=stack(ks[10], (c.d_model, c.d_ff), n=nb),
+            w2=stack(ks[11], (c.d_ff, c.d_model), n=nb),
+        )
+        return dict(
+            emb=L.dense_init(ks[12], (c.padded_vocab, c.d_model), dt, 0.02),
+            ln_f=jnp.ones((c.d_model,), dt),
+            mamba=mamba, shared=shared,
+            lm_head=L.dense_init(ks[13], (c.padded_vocab, c.d_model), dt, 0.02),
+        )
+
+    def param_count(self) -> int:
+        c, s = self.cfg, self.cfg.ssm
+        per_mamba = (c.d_model * (self.d_inner + self.conv_dim + self.nh)
+                     + self.conv_dim * s.d_conv + 3 * self.nh
+                     + self.d_inner + self.d_inner * c.d_model + c.d_model)
+        per_shared = (c.d_model * (c.q_dim + 2 * c.kv_dim) + c.q_dim * c.d_model
+                      + 3 * c.d_model * c.d_ff + 2 * c.d_model)
+        return (c.n_layers * per_mamba + c.n_shared_blocks * per_shared
+                + 2 * c.vocab * c.d_model + c.d_model)
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -- SSD core --------------------------------------------------------------
+
+    def _ssd_scan(self, xh, dt, Bm, Cm, a_log, init_state=None):
+        """Chunked SSD. xh:(B,S,H,P) dt:(B,S,H) Bm/Cm:(B,S,G,N) -> (y, state)."""
+        c = self.cfg.ssm
+        Bb, S, H, P = xh.shape
+        G, N = Bm.shape[2], Bm.shape[3]
+        Q = min(c.chunk, S)
+        assert S % Q == 0
+        nc = S // Q
+        A = -jnp.exp(a_log.astype(jnp.float32))            # (H,) negative
+        dA = dt * A                                         # (B,S,H) log decay
+        xdt = (xh.astype(jnp.float32) * dt[..., None])
+
+        def reshape(t):
+            return t.reshape((Bb, nc, Q) + t.shape[2:])
+        dA_c, xdt_c = reshape(dA), reshape(xdt)
+        B_c, C_c = reshape(Bm.astype(jnp.float32)), reshape(Cm.astype(jnp.float32))
+        hpg = H // G                                        # heads per group
+
+        def chunk_step(h, inp):
+            dAq, xq, Bq, Cq = inp                           # (B,Q,...) for one chunk
+            cs = jnp.cumsum(dAq, axis=1)                    # (B,Q,H)
+            # intra-chunk: Y_d[i] = sum_{j<=i} (C_i.B_j) exp(cs_i-cs_j) xdt_j
+            seg = cs[:, :, None, :] - cs[:, None, :, :]     # (B,Q,Q,H)
+            causal = jnp.tril(jnp.ones((Q, Q), bool))
+            seg = jnp.where(causal[None, :, :, None], seg, -1e30)  # mask pre-exp
+            Ldec = jnp.exp(seg)
+            cb = jnp.einsum("bign,bjgn->bijg", Cq, Bq)      # (B,Q,Q,G)
+            cb = jnp.repeat(cb, hpg, axis=3)                # (B,Q,Q,H)
+            Yd = jnp.einsum("bijh,bjhp->bihp", cb * Ldec, xq)
+            # inter-chunk: Y_o[i] = (C_i . h_prev) * exp(cs_i)
+            Ch = jnp.repeat(Cq, hpg, axis=2).reshape(Bb, Q, H, N)
+            Yo = jnp.einsum("bihn,bhnp->bihp", Ch, h) * jnp.exp(cs)[..., None]
+            # state update: h' = exp(cs_last) h + sum_j exp(cs_last-cs_j) B_j x_j
+            wj = jnp.exp(cs[:, -1:, :] - cs)                # (B,Q,H)
+            Bh = jnp.repeat(Bq, hpg, axis=2).reshape(Bb, Q, H, N)
+            Snew = jnp.einsum("bjhn,bjhp->bhnp", Bh * wj[..., None], xq)
+            h = h * jnp.exp(cs[:, -1, :])[..., None, None] + Snew
+            return h, Yd + Yo
+
+        h0 = (jnp.zeros((Bb, H, N, P), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+        inp = (dA_c.transpose(1, 0, 2, 3), xdt_c.transpose(1, 0, 2, 3, 4),
+               B_c.transpose(1, 0, 2, 3, 4), C_c.transpose(1, 0, 2, 3, 4))
+        h, Yc = jax.lax.scan(chunk_step, h0, inp)
+        y = Yc.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, P)
+        return y, h
+
+    def _mamba_layer(self, x, w, conv_state=None, ssm_state=None):
+        """x: (B,S,D). Returns (out, (conv_state, ssm_state)) — states only
+        maintained when decode (S==1, states given)."""
+        c, s = self.cfg, self.cfg.ssm
+        B, S, D = x.shape
+        xin = L.rms_norm(x, w["ln"], c.norm_eps)
+        z = xin @ w["wz"]                                   # (B,S,d_inner)
+        xbc = xin @ w["wxbc"]                               # (B,S,conv_dim)
+        dt_raw = (xin @ w["wdt"]).astype(jnp.float32)       # (B,S,nh)
+
+        if conv_state is None:                              # train/prefill
+            pad = jnp.pad(xbc, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+            win = jnp.stack([pad[:, i:i + S] for i in range(s.d_conv)], -1)
+            xbc_c = jnp.einsum("bsdk,dk->bsd", win, w["conv_w"])
+            new_conv = pad[:, -(s.d_conv - 1):].transpose(0, 2, 1)  # (B,cd,k-1)
+        else:                                                # decode
+            win = jnp.concatenate([conv_state, xbc.transpose(0, 2, 1)], -1)
+            xbc_c = jnp.einsum("bdk,dk->bd", win, w["conv_w"])[:, None]
+            new_conv = win[:, :, 1:]
+        xbc_c = jax.nn.silu(xbc_c)
+
+        xh = xbc_c[..., :self.d_inner].reshape(B, S, self.nh, s.head_dim)
+        bc = xbc_c[..., self.d_inner:]
+        Bm = bc[..., :s.n_groups * s.d_state].reshape(B, S, s.n_groups, s.d_state)
+        Cm = bc[..., s.n_groups * s.d_state:].reshape(B, S, s.n_groups, s.d_state)
+        dt = jax.nn.softplus(dt_raw + w["dt_bias"])
+
+        if ssm_state is None and S > 1:
+            xh = hints.shard(xh, "ssm_heads")      # (B,S,H,P): H -> model
+            dt = hints.shard(dt, "ssm_gates")
+            y, new_state = self._ssd_scan(xh, dt, Bm, Cm, w["a_log"])
+        else:                                                # single-step decode
+            A = -jnp.exp(w["a_log"].astype(jnp.float32))
+            dA = jnp.exp(dt[:, 0] * A)                       # (B,H)
+            hpg = self.nh // s.n_groups
+            Bh = jnp.repeat(Bm[:, 0], hpg, axis=1)           # (B,H,N)
+            Ch = jnp.repeat(Cm[:, 0], hpg, axis=1)
+            xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]
+            h0 = jnp.zeros((B, self.nh, s.d_state, s.head_dim), jnp.float32) \
+                if ssm_state is None else ssm_state
+            new_state = (h0 * dA[..., None, None]
+                         + jnp.einsum("bhn,bhp->bhnp", Bh, xdt))
+            y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)[:, None]
+        y = y + xh.astype(jnp.float32) * w["d_skip"][:, None]
+        y = y.reshape(B, S, self.d_inner)
+        y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), w["norm"],
+                       c.norm_eps)
+        return x + (y @ w["wout"]).astype(x.dtype), (new_conv, new_state)
+
+    # -- shared attention block -------------------------------------------------
+
+    def _shared_block(self, x, w, *, positions, cache=None, cache_len=None):
+        c = self.cfg
+        B, S, _ = x.shape
+        xn = L.rms_norm(x, w["ln1"], c.norm_eps)
+        q = (xn @ w["wq"]).reshape(B, S, c.n_heads, c.d_head)
+        k = (xn @ w["wk"]).reshape(B, S, c.n_kv_heads, c.d_head)
+        v = (xn @ w["wv"]).reshape(B, S, c.n_kv_heads, c.d_head)
+        q = L.apply_rope(q, positions, c.rope_theta)
+        k = L.apply_rope(k, positions, c.rope_theta)
+        W = min(c.sliding_window or S, self.cfg.max_context)
+        if cache is None:
+            o = L.flash_attention(q, k, v, causal=True, window=c.sliding_window)
+            Wc = min(W, S)
+            new_cache = (k[:, S - Wc:], v[:, S - Wc:])      # ring-aligned tail
+        else:
+            k_c, v_c = cache
+            Wc = k_c.shape[1]
+            slot = cache_len % Wc
+            idx = jnp.arange(B)
+            k_c = k_c.at[idx, slot].set(k[:, 0])
+            v_c = v_c.at[idx, slot].set(v[:, 0])
+            valid = jnp.minimum(cache_len + 1, Wc)
+            o = L.decode_attention(q, k_c, v_c, valid)       # ring: all valid slots
+            new_cache = (k_c, v_c)
+        x = x + (o.reshape(B, S, -1) @ w["wo"])
+        h = L.swiglu(L.rms_norm(x, w["ln2"], c.norm_eps), w["w1"], w["w3"], w["w2"])
+        return x + h, new_cache
+
+    # -- public API ---------------------------------------------------------------
+
+    def _mamba_group_params(self):
+        """Reshape stacked (nl, ...) mamba params to (n_outer, shared_every, ...)."""
+        def r(t):
+            return t.reshape((self.n_groups_outer, self.cfg.shared_every) + t.shape[1:])
+        return r
+
+    def loss(self, params, batch) -> jax.Array:
+        c = self.cfg
+        tokens, targets = batch["tokens"], batch["targets"]
+        x = params["emb"][tokens]
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :]
+        r = self._mamba_group_params()
+        gm = jax.tree.map(r, params["mamba"])
+
+        def group(x, inp):
+            g, wm = inp
+            sw = jax.tree.map(lambda t: t[g % c.n_shared_blocks], params["shared"])
+            x = hints.shard(x, "residual")
+            x, _ = self._shared_block(x, sw, positions=positions)
+
+            def mamba_body(x, w):
+                return jax.checkpoint(
+                    lambda x, w: self._mamba_layer(hints.shard(x, "residual"), w)[0])(x, w), None
+            x, _ = jax.lax.scan(mamba_body, x, wm)
+            return x, None
+
+        x, _ = jax.lax.scan(group, x, (jnp.arange(self.n_groups_outer), gm))
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = hints.shard(
+            jnp.einsum("bsd,vd->bsv", x, params["lm_head"]), "logits")
+        return L.softmax_xent(logits, targets, batch.get("loss_mask"))
+
+    def init_cache(self, batch: int, seq_len: int) -> Dict:
+        c, s = self.cfg, self.cfg.ssm
+        W = min(c.sliding_window or seq_len, seq_len)
+        na = self.n_groups_outer
+        return dict(
+            ssm=jnp.zeros((c.n_layers, batch, self.nh, s.d_state, s.head_dim),
+                          jnp.float32),
+            conv=jnp.zeros((c.n_layers, batch, self.conv_dim, s.d_conv - 1),
+                           self.dtype),
+            attn_k=jnp.zeros((na, batch, W, c.n_kv_heads, c.d_head), self.dtype),
+            attn_v=jnp.zeros((na, batch, W, c.n_kv_heads, c.d_head), self.dtype),
+            len=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def prefill(self, params, tokens):
+        c = self.cfg
+        x = params["emb"][tokens]
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :]
+        r = self._mamba_group_params()
+        gm = jax.tree.map(r, params["mamba"])
+
+        def group(x, inp):
+            g, wm = inp
+            sw = jax.tree.map(lambda t: t[g % c.n_shared_blocks], params["shared"])
+            x, (kc, vc) = self._shared_block(x, sw, positions=positions)
+
+            def mamba_body(x, w):
+                x, (conv, ssm) = self._mamba_layer(x, w)
+                return x, (conv, ssm)
+            x, (convs, ssms) = jax.lax.scan(mamba_body, x, wm)
+            return x, (kc, vc, convs, ssms)
+
+        x, (kcs, vcs, convs, ssms) = jax.lax.scan(
+            group, x, (jnp.arange(self.n_groups_outer), gm))
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"])
+        cache = dict(
+            ssm=ssms.reshape((c.n_layers,) + ssms.shape[2:]),
+            conv=convs.reshape((c.n_layers,) + convs.shape[2:]),
+            attn_k=kcs, attn_v=vcs,
+            len=jnp.full((B,), S, jnp.int32),
+        )
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        c = self.cfg
+        B = tokens.shape[0]
+        x = params["emb"][tokens[:, None]]
+        clen = cache["len"]
+        positions = clen[:, None]
+        r = self._mamba_group_params()
+        gm = jax.tree.map(r, params["mamba"])
+        ssm_g = cache["ssm"].reshape((self.n_groups_outer, c.shared_every)
+                                     + cache["ssm"].shape[1:])
+        conv_g = cache["conv"].reshape((self.n_groups_outer, c.shared_every)
+                                       + cache["conv"].shape[1:])
+
+        def group(x, inp):
+            g, wm, kc, vc, ssm, conv = inp
+            sw = jax.tree.map(lambda t: t[g % c.n_shared_blocks], params["shared"])
+            x, (kc, vc) = self._shared_block(x, sw, positions=positions,
+                                             cache=(kc, vc), cache_len=clen)
+
+            def mamba_body(x, wstate):
+                w, cs, ss = wstate
+                x, (cs, ss) = self._mamba_layer(x, w, conv_state=cs, ssm_state=ss)
+                return x, (cs, ss)
+            x, (convs, ssms) = jax.lax.scan(mamba_body, x, (wm, conv, ssm))
+            return x, (kc, vc, convs, ssms)
+
+        x, (kcs, vcs, convs, ssms) = jax.lax.scan(
+            group, x, (jnp.arange(self.n_groups_outer), gm,
+                       cache["attn_k"], cache["attn_v"], ssm_g, conv_g))
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, 0], params["lm_head"])
+        new_cache = dict(
+            ssm=ssms.reshape(cache["ssm"].shape),
+            conv=convs.reshape(cache["conv"].shape),
+            attn_k=kcs, attn_v=vcs, len=clen + 1,
+        )
+        return logits, new_cache
+
+    def input_specs(self, cell: ShapeCell) -> Dict:
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        if cell.kind == "train":
+            return dict(tokens=jax.ShapeDtypeStruct((B, S), i32),
+                        targets=jax.ShapeDtypeStruct((B, S), i32))
+        if cell.kind == "prefill":
+            return dict(tokens=jax.ShapeDtypeStruct((B, S), i32))
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        return dict(cache=cache, tokens=jax.ShapeDtypeStruct((B,), i32))

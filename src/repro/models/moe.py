@@ -1,0 +1,140 @@
+"""Mixture-of-Experts LM (granite-moe, qwen3-moe).
+
+Dispatch strategy (TPU-native, see DESIGN.md §4):
+  * tokens stay sharded over the data axis; dispatch is *group-local*
+    (group = one sequence) via cumsum-position gather — no one-hot einsum
+    (a GShard (g,s,e,c) dispatch einsum would cost ~2x the expert GEMMs).
+  * expert GEMMs run as einsum("gecd,edf->gecf"); expert weights are
+    sharded E->model when E % tp == 0 (qwen3: EP, all-to-all inserted by
+    GSPMD) else F->model (granite: TP-inside-expert, all-reduce).
+  * fixed capacity_factor with token dropping (standard for TPU training);
+    dropped tokens pass through the residual only.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.transformer import DenseLM
+
+
+class MoELM(DenseLM):
+    @property
+    def e_pad(self) -> int:
+        """Experts padded to a multiple of 16 so EP shards cleanly over the
+        TP=16 mesh axis (granite: 40 -> 48; dummy experts are never routed
+        to — TP-in-expert for ragged E all-reduces (g,E,C,D) partials, ~60s
+        of collective per prefill step, see EXPERIMENTS SSPerf)."""
+        e = self.cfg.moe.n_experts
+        return e if e % 16 == 0 or e < 16 else ((e + 15) // 16) * 16
+
+    def init(self, rng) -> Dict:
+        p = super().init(rng)
+        c, dt = self.cfg, self.dtype
+        m = c.moe
+        n = c.n_layers
+        ep = self.e_pad
+        ks = jax.random.split(jax.random.fold_in(rng, 17), 4)
+        del p["blocks"]["w1"], p["blocks"]["w3"], p["blocks"]["w2"]
+        p["blocks"]["router"] = L.dense_init(
+            ks[0], (n, c.d_model, m.n_experts), jnp.float32, 0.02)
+        p["blocks"]["we1"] = L.dense_init(
+            ks[1], (n, ep, c.d_model, m.d_expert_ff), dt)
+        p["blocks"]["we3"] = L.dense_init(
+            ks[2], (n, ep, c.d_model, m.d_expert_ff), dt)
+        p["blocks"]["we2"] = L.dense_init(
+            ks[3], (n, ep, m.d_expert_ff, c.d_model), dt)
+        return p
+
+    def param_count(self) -> int:
+        c, m = self.cfg, self.cfg.moe
+        per_layer = (c.d_model * (c.q_dim + 2 * c.kv_dim) + c.q_dim * c.d_model
+                     + 3 * m.n_experts * c.d_model * m.d_expert_ff
+                     + c.d_model * m.n_experts + 2 * c.d_model)
+        emb = c.vocab * c.d_model * (1 if c.tie_embeddings else 2)
+        return c.n_layers * per_layer + emb + c.d_model
+
+    def active_param_count(self) -> int:
+        c, m = self.cfg, self.cfg.moe
+        per_layer = (c.d_model * (c.q_dim + 2 * c.kv_dim) + c.q_dim * c.d_model
+                     + 3 * m.top_k * c.d_model * m.d_expert_ff
+                     + c.d_model * m.n_experts + 2 * c.d_model)
+        emb = c.vocab * c.d_model * (1 if c.tie_embeddings else 2)
+        return c.n_layers * per_layer + emb + c.d_model
+
+    def _capacity(self, tokens_per_group: int) -> int:
+        m = self.cfg.moe
+        cap = int(np.ceil(tokens_per_group * m.top_k / m.n_experts
+                          * m.capacity_factor))
+        return max(8, int(np.ceil(cap / 8)) * 8)   # pad to 8 for TPU layout
+
+    def _ffn(self, x, w):
+        """x: (B, S, D). Group-local top-k dispatch; returns (out, aux).
+        Dispatch groups are sequence chunks of <=2048 tokens so the (E, C, D)
+        capacity buffers stay small at 32K prefill (group = full sequence
+        would make granite's buffers 130 GB/device)."""
+        c, m = self.cfg, self.cfg.moe
+        B0, S0, D = x.shape
+        G = min(2048, S0)
+        x = x.reshape(B0 * (S0 // G), G, D)
+        B, S, _ = x.shape
+        E, K = m.n_experts, m.top_k
+        Ep = self.e_pad
+        C = self._capacity(S)
+
+        logits = (x.astype(jnp.float32) @ w["router"])           # (B,S,E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, expert_idx = jax.lax.top_k(probs, K)               # (B,S,K)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        # load-balance aux loss (Switch):  E * sum_e f_e * p_e
+        me = probs.mean(axis=(0, 1))                              # (E,)
+        ce = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)     # (B,S,K,E)
+        fe = ce.mean(axis=(0, 1)).sum(0)                          # (E,)
+        aux = 0.01 * E * jnp.sum(me * fe)
+
+        # --- group-local dispatch (vmapped over groups) ---------------------
+        # Combine is a SCATTER-ADD from expert-major y back to token rows
+        # (not a gather across the expert dim): with EP-sharded experts GSPMD
+        # then emits local scatter + one (tokens, D) all-reduce instead of
+        # all-gathering the (E, C, D) expert outputs (~20x less traffic).
+        def dispatch(xg, idxg, gateg):
+            # xg: (S,D); idxg/gateg: (S,K)
+            assign = idxg.reshape(-1)                             # (S*K,)
+            onehot = jax.nn.one_hot(assign, Ep, dtype=jnp.int32)  # (S*K,Ep)
+            pos = jnp.cumsum(onehot, axis=0) * onehot - 1
+            pos_in_e = (pos * onehot).sum(-1)                     # (S*K,)
+            keep = pos_in_e < C
+            slot = jnp.where(keep, pos_in_e, C - 1)
+            tok = jnp.repeat(jnp.arange(S), K)
+            buf = jnp.zeros((Ep, C, D), xg.dtype)
+            buf = buf.at[assign, slot].add(
+                jnp.where(keep[:, None], xg[tok], 0), mode="drop")
+            # token/gate maps in expert-major layout for the combine scatter
+            tok_map = jnp.full((Ep, C), S, jnp.int32)             # S = dump row
+            tok_map = tok_map.at[assign, slot].set(
+                jnp.where(keep, tok, S), mode="drop")
+            gate_map = jnp.zeros((Ep, C), jnp.float32)
+            gate_map = gate_map.at[assign, slot].add(
+                gateg.reshape(-1) * keep, mode="drop")
+            return buf, tok_map, gate_map
+
+        buf, tok_map, gate_map = jax.vmap(dispatch)(x, expert_idx, gate)
+
+        h = L.einsum32("becd,edf->becf", buf, w["we1"])
+        g = L.einsum32("becd,edf->becf", buf, w["we3"])
+        h = (jax.nn.silu(h) * g).astype(buf.dtype)
+        y = L.einsum32("becf,efd->becd", h, w["we2"])         # (B,E,C,D) f32
+
+        def combine(yg, tokg, gateg):
+            vals = yg.reshape(Ep * C, D) * gateg.reshape(Ep * C)[:, None]
+            out = jnp.zeros((S + 1, D), jnp.float32)
+            out = out.at[tokg.reshape(Ep * C)].add(vals)
+            return out[:S]
+
+        out = jax.vmap(combine)(y, tok_map, gate_map)
+        return out.astype(x.dtype).reshape(B0, S0, D), aux

@@ -1,0 +1,23 @@
+"""arch family -> model class resolution."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "vlm"):
+        from repro.models.transformer import DenseLM
+        return DenseLM(cfg)
+    if cfg.family == "moe":
+        from repro.models.moe import MoELM
+        return MoELM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.mamba2 import Zamba2LM
+        return Zamba2LM(cfg)
+    if cfg.family == "xlstm":
+        from repro.models.xlstm import XLSTMLM
+        return XLSTMLM(cfg)
+    raise KeyError(cfg.family)

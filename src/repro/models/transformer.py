@@ -1,0 +1,248 @@
+"""Dense decoder-only transformer (llama/qwen/yi/minicpm families) and the
+phi-3-vision backbone (same block; precomputed patch embeddings prepended).
+
+Layer stacks are scanned with stacked parameters (L, ...) — keeps HLO small,
+enables layerwise KV streaming (the SYMPHONY node manager moves KV tier-wise
+per layer), and matches how the tiered KV store addresses cache slices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed import hints
+from repro.models import layers as L
+
+
+class DenseLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # -- parameters ---------------------------------------------------------
+
+    def init(self, rng) -> Dict:
+        c, dt = self.cfg, self.dtype
+        n = c.n_layers
+        ks = jax.random.split(rng, 16)
+
+        def stack(key, shape, scale=None):
+            return L.dense_init(key, (n,) + shape, dt, scale)
+
+        p = dict(
+            emb=L.dense_init(ks[0], (c.padded_vocab, c.d_model), dt, 0.02),
+            ln_f=jnp.ones((c.d_model,), dt),
+            blocks=dict(
+                ln1=jnp.ones((n, c.d_model), dt),
+                ln2=jnp.ones((n, c.d_model), dt),
+                wq=stack(ks[1], (c.d_model, c.q_dim)),
+                wk=stack(ks[2], (c.d_model, c.kv_dim)),
+                wv=stack(ks[3], (c.d_model, c.kv_dim)),
+                wo=stack(ks[4], (c.q_dim, c.d_model)),
+                w1=stack(ks[5], (c.d_model, c.d_ff)),
+                w3=stack(ks[6], (c.d_model, c.d_ff)),
+                w2=stack(ks[7], (c.d_ff, c.d_model)),
+            ),
+        )
+        if not c.tie_embeddings:
+            p["lm_head"] = L.dense_init(ks[8], (c.padded_vocab, c.d_model), dt, 0.02)
+        if c.qk_norm:
+            p["blocks"]["qn"] = jnp.ones((n, c.d_head), dt)
+            p["blocks"]["kn"] = jnp.ones((n, c.d_head), dt)
+        if c.family == "vlm":
+            p["patch_proj"] = L.dense_init(ks[9], (c.d_frontend, c.d_model), dt)
+        return p
+
+    def param_count(self) -> int:
+        c = self.cfg
+        per_layer = (c.d_model * (c.q_dim + 2 * c.kv_dim) + c.q_dim * c.d_model
+                     + 3 * c.d_model * c.d_ff + 2 * c.d_model)
+        emb = c.vocab * c.d_model * (1 if c.tie_embeddings else 2)
+        extra = c.d_frontend * c.d_model if c.family == "vlm" else 0
+        return c.n_layers * per_layer + emb + c.d_model + extra
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -- blocks -------------------------------------------------------------
+
+    def _attn(self, x, w, *, positions, cache_kv=None, cache_len=None,
+              prefix_kv=None, q_offset=0):
+        """Returns (attn_out, new_kv). Modes:
+        - training/prefill: full-sequence flash attention (+optional prefix)
+        - decode: cache_kv given, single new position per sequence
+        """
+        c = self.cfg
+        B, S, _ = x.shape
+        q = (x @ w["wq"]).reshape(B, S, c.n_heads, c.d_head)
+        k = (x @ w["wk"]).reshape(B, S, c.n_kv_heads, c.d_head)
+        v = (x @ w["wv"]).reshape(B, S, c.n_kv_heads, c.d_head)
+        if c.qk_norm:
+            q = L.rms_norm(q, w["qn"], c.norm_eps)
+            k = L.rms_norm(k, w["kn"], c.norm_eps)
+        q = L.apply_rope(q, positions, c.rope_theta)
+        k = L.apply_rope(k, positions, c.rope_theta)
+
+        if cache_kv is not None:          # decode: S == 1, cache (B,H,S,D)
+            k_cache, v_cache = cache_kv
+            bi = jnp.arange(B)[:, None]
+            hi = jnp.arange(c.n_kv_heads)[None, :]
+            k_cache = k_cache.at[bi, hi, cache_len[:, None]].set(
+                k[:, 0].transpose(0, 1, 2))
+            v_cache = v_cache.at[bi, hi, cache_len[:, None]].set(v[:, 0])
+            o = L.decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                   window=c.sliding_window, layout="bhsd")
+            return o.reshape(B, S, -1) @ w["wo"], (k_cache, v_cache)
+
+        if prefix_kv is not None:         # continuation prefill (multi-turn)
+            pk, pv = prefix_kv
+            k = jnp.concatenate([pk, k], axis=1)
+            v = jnp.concatenate([pv, v], axis=1)
+        # ragged-head archs (36 heads, TP=16): force (padded) head sharding,
+        # else GSPMD replicates the attention streams over `model` (SSPerf it.8)
+        q = hints.shard(q, "attn_heads")
+        k = hints.shard(k, "attn_heads")
+        v = hints.shard(v, "attn_heads")
+        o = L.flash_attention(q, k, v, causal=True, q_offset=q_offset,
+                              window=c.sliding_window)
+        return o.reshape(B, S, -1) @ w["wo"], (k, v)
+
+    def _ffn(self, x, w):
+        """Returns (ffn_out, aux_loss)."""
+        return L.swiglu(x, w["w1"], w["w3"], w["w2"]), jnp.float32(0.0)
+
+    def _block(self, x, w, *, positions, cache_kv=None, cache_len=None,
+               prefix_kv=None, q_offset=0):
+        c = self.cfg
+        a, new_kv = self._attn(L.rms_norm(x, w["ln1"], c.norm_eps), w,
+                               positions=positions, cache_kv=cache_kv,
+                               cache_len=cache_len, prefix_kv=prefix_kv,
+                               q_offset=q_offset)
+        x = x + a
+        h, aux = self._ffn(L.rms_norm(x, w["ln2"], c.norm_eps), w)
+        return x + h, new_kv, aux
+
+    # -- embedding / unembedding --------------------------------------------
+
+    def _embed(self, params, tokens, patches=None):
+        x = params["emb"][tokens]
+        if patches is not None:
+            pe = (patches.astype(self.dtype) @ params["patch_proj"])
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def _unembed(self, params, x):
+        head = params["emb"] if self.cfg.tie_embeddings else params["lm_head"]
+        return jnp.einsum("...d,vd->...v", x, head)
+
+    # -- public API ----------------------------------------------------------
+
+    def loss(self, params, batch) -> jax.Array:
+        c = self.cfg
+        tokens, targets = batch["tokens"], batch["targets"]
+        patches = batch.get("patches")
+        x = hints.shard(self._embed(params, tokens, patches), "act")
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :]
+
+        def block(x, w):
+            x = hints.shard(x, "residual")
+            x, _, aux = self._block(x, w, positions=positions)
+            return x, aux
+        block = jax.checkpoint(block)
+
+        def body(x, w):
+            return block(x, w)
+        x, auxs = jax.lax.scan(body, x, params["blocks"])
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        if patches is not None:          # loss over text positions only
+            x = x[:, patches.shape[1]:]
+        logits = hints.shard(self._unembed(params, x), "logits")
+        xent = L.softmax_xent(logits, targets, batch.get("loss_mask"))
+        return xent + auxs.sum()
+
+    def init_cache(self, batch: int, seq_len: int) -> Dict:
+        """Head-major (L, B, Hkv, S, D): per-head (S, D) tiles contiguous, so
+        the decode read path needs no transpose-copies (SSPerf iteration 3)."""
+        c = self.cfg
+        kv = lambda: jnp.zeros(
+            (c.n_layers, batch, c.n_kv_heads, seq_len, c.d_head), self.dtype)
+        return dict(k=kv(), v=kv(), len=jnp.zeros((batch,), jnp.int32))
+
+    def cache_seq_len(self, cache) -> int:
+        return cache["k"].shape[3]
+
+    def grow_cache(self, cache, extra: int) -> Dict:
+        big = self.init_cache(cache["k"].shape[1], self.cache_seq_len(cache)
+                              + extra)
+        for key in ("k", "v"):
+            big[key] = big[key].at[..., :cache[key].shape[3], :].set(cache[key])
+        big["len"] = cache["len"]
+        return big
+
+    def prefill(self, params, tokens, patches=None):
+        """Process a full prompt; returns (last_logits, cache)."""
+        c = self.cfg
+        x = self._embed(params, tokens, patches)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :]
+
+        def body(x, w):
+            x, (k, v), _ = self._block(x, w, positions=positions)
+            return x, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = self._unembed(params, x[:, -1])
+        cache = dict(k=ks, v=vs, len=jnp.full((B,), S, jnp.int32))
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """One token per sequence. tokens: (B,) int32."""
+        c = self.cfg
+        x = self._embed(params, tokens[:, None])
+        clen = cache["len"]
+        positions = clen[:, None]
+
+        def body(x, wkv):
+            w, (k_c, v_c) = wkv
+            x, (k_c, v_c), _ = self._block(x, w, positions=positions,
+                                           cache_kv=(k_c, v_c), cache_len=clen)
+            return x, (k_c, v_c)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"],
+                                             (cache["k"], cache["v"])))
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = self._unembed(params, x[:, 0])
+        return logits, dict(k=ks, v=vs, len=clen + 1)
+
+    # -- dry-run specs --------------------------------------------------------
+
+    def input_specs(self, cell: ShapeCell) -> Dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        c = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        if c.family == "vlm":
+            P = c.n_patches
+            text = S - P
+            if cell.kind == "train":
+                return dict(tokens=jax.ShapeDtypeStruct((B, text), i32),
+                            targets=jax.ShapeDtypeStruct((B, text), i32),
+                            patches=jax.ShapeDtypeStruct((B, P, c.d_frontend),
+                                                         jnp.bfloat16))
+            if cell.kind == "prefill":
+                return dict(tokens=jax.ShapeDtypeStruct((B, text), i32),
+                            patches=jax.ShapeDtypeStruct((B, P, c.d_frontend),
+                                                         jnp.bfloat16))
+        if cell.kind in ("train",):
+            return dict(tokens=jax.ShapeDtypeStruct((B, S), i32),
+                        targets=jax.ShapeDtypeStruct((B, S), i32))
+        if cell.kind == "prefill":
+            return dict(tokens=jax.ShapeDtypeStruct((B, S), i32))
+        # decode: one new token against an S-long cache
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        return dict(cache=cache, tokens=jax.ShapeDtypeStruct((B,), i32))

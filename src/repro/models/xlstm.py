@@ -1,0 +1,414 @@
+"""xLSTM LM (arXiv:2405.04517): groups of mLSTM blocks with interleaved
+sLSTM blocks (xLSTM[7:1] for the assigned 1.3B config).
+
+mLSTM: matrix memory C in (d_qk x d_v) per head with exponential gating;
+prefill/train use a stabilized *chunkwise-parallel* form (scan over chunks,
+flash-attention-style running log-scale stabilizer m); decode is the O(1)
+recurrent step.  d_qk = d_head (512), d_v = 2*d_head (official qk_dim_factor
+= 0.5 with proj_factor 2).
+
+sLSTM: scalar memory per head with recurrent block-diagonal weights and
+memory mixing — inherently sequential, lowered as lax.scan over time (the
+paper itself notes sLSTM is not parallelizable).
+
+Session state for SYMPHONY = {C, n, m} per mLSTM layer + {c, n, h, m} per
+sLSTM layer + conv tails: fixed-size, context-length independent.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed import hints
+from repro.models import layers as L
+
+CHUNK = 256
+
+
+def _round64(x: float) -> int:
+    return int(np.ceil(x / 64) * 64)
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        x = cfg.xlstm
+        self.nh = cfg.n_heads
+        self.d_qk = cfg.d_head                       # 512
+        self.d_v = int(cfg.d_head * x.proj_factor)   # 1024
+        self.d_inner = self.nh * self.d_v            # 4096 (the "up" dim)
+        self.group = x.m_per_group + x.s_per_group
+        assert cfg.n_layers % self.group == 0
+        self.n_groups = cfg.n_layers // self.group
+        self.d_ffn_s = _round64(cfg.d_model * x.slstm_proj_factor)
+        self.d_head_s = cfg.d_model // self.nh       # sLSTM head dim
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, rng) -> Dict:
+        c, dt = self.cfg, self.dtype
+        nm = self.n_groups * c.xlstm.m_per_group
+        ns = self.n_groups * c.xlstm.s_per_group
+        ks = jax.random.split(rng, 20)
+
+        def stack(key, shape, n, scale=None):
+            return L.dense_init(key, (n,) + shape, dt, scale)
+
+        mlstm = dict(
+            ln=jnp.ones((nm, c.d_model), dt),
+            w_up=stack(ks[0], (c.d_model, 2 * self.d_inner), nm),
+            conv_w=stack(ks[1], (self.d_inner, c.xlstm.conv_kernel), nm, 0.3),
+            wq=stack(ks[2], (self.nh, self.d_v, self.d_qk), nm),
+            wk=stack(ks[3], (self.nh, self.d_v, self.d_qk), nm),
+            wv=stack(ks[4], (self.nh, self.d_v, self.d_v), nm),
+            wif=stack(ks[5], (self.d_inner, 2 * self.nh), nm, 0.02),
+            b_if=jnp.tile(jnp.concatenate([
+                jnp.full((self.nh,), -2.0), jnp.full((self.nh,), 3.0)])[None],
+                (nm, 1)).astype(jnp.float32),
+            gn=jnp.ones((nm, self.d_inner), dt),
+            w_down=stack(ks[6], (self.d_inner, c.d_model), nm),
+        )
+        ph = self.d_head_s
+        slstm = dict(
+            ln=jnp.ones((ns, c.d_model), dt),
+            w_ifzo=stack(ks[7], (c.d_model, 4 * c.d_model), ns),
+            r_ifzo=stack(ks[8], (self.nh, ph, 4 * ph), ns),
+            b_ifzo=jnp.tile(jnp.concatenate([
+                jnp.full((c.d_model,), -2.0), jnp.full((c.d_model,), 3.0),
+                jnp.zeros((2 * c.d_model,))])[None], (ns, 1)).astype(jnp.float32),
+            gn=jnp.ones((ns, c.d_model), dt),
+            w_out=stack(ks[9], (c.d_model, c.d_model), ns),
+            ln2=jnp.ones((ns, c.d_model), dt),
+            w_f1=stack(ks[10], (c.d_model, self.d_ffn_s), ns),
+            w_f3=stack(ks[11], (c.d_model, self.d_ffn_s), ns),
+            w_f2=stack(ks[12], (self.d_ffn_s, c.d_model), ns),
+        )
+        return dict(
+            emb=L.dense_init(ks[13], (c.padded_vocab, c.d_model), dt, 0.02),
+            ln_f=jnp.ones((c.d_model,), dt),
+            mlstm=mlstm, slstm=slstm,
+            lm_head=L.dense_init(ks[14], (c.padded_vocab, c.d_model), dt, 0.02),
+        )
+
+    def param_count(self) -> int:
+        c = self.cfg
+        nm = self.n_groups * c.xlstm.m_per_group
+        ns = self.n_groups * c.xlstm.s_per_group
+        per_m = (c.d_model * 2 * self.d_inner + self.d_inner * c.xlstm.conv_kernel
+                 + self.nh * self.d_v * (2 * self.d_qk + self.d_v)
+                 + self.d_inner * 2 * self.nh + self.d_inner
+                 + self.d_inner * c.d_model + c.d_model)
+        per_s = (4 * c.d_model * c.d_model + self.nh * self.d_head_s * 4 * self.d_head_s
+                 + c.d_model * c.d_model + 3 * c.d_model * self.d_ffn_s
+                 + 3 * c.d_model)
+        return nm * per_m + ns * per_s + 2 * c.vocab * c.d_model + c.d_model
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -- mLSTM ------------------------------------------------------------------
+
+    def _mlstm_qkvif(self, x, w):
+        """x:(B,S,D) -> q,k,v,(log_i,log_f),z with conv on the x branch."""
+        c = self.cfg
+        B, S, _ = x.shape
+        xn = L.rms_norm(x, w["ln"], c.norm_eps)
+        up = xn @ w["w_up"]
+        xm, z = jnp.split(up, 2, axis=-1)                  # (B,S,inner) each
+        K = c.xlstm.conv_kernel
+        pad = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+        win = jnp.stack([pad[:, i:i + S] for i in range(K)], -1)
+        xc = jax.nn.silu(jnp.einsum("bsdk,dk->bsd", win, w["conv_w"]))
+        conv_tail = pad[:, -(K - 1):].transpose(0, 2, 1)   # (B,inner,K-1)
+        xh = xc.reshape(B, S, self.nh, self.d_v)
+        q = jnp.einsum("bshv,hvq->bshq", xh, w["wq"])
+        k = jnp.einsum("bshv,hvq->bshq", xh, w["wk"]) / np.sqrt(self.d_qk)
+        v = jnp.einsum("bshv,hvw->bshw",
+                       xm.reshape(B, S, self.nh, self.d_v), w["wv"])
+        gates = (xc @ w["wif"]).astype(jnp.float32) + w["b_if"]
+        log_i, f_raw = jnp.split(gates, 2, axis=-1)        # (B,S,NH)
+        log_f = -jax.nn.softplus(-f_raw)                   # log sigmoid
+        return q, k, v, log_i, log_f, z, conv_tail
+
+    def _mlstm_chunked(self, q, k, v, log_i, log_f, state=None):
+        """Stabilized chunkwise mLSTM. q,k:(B,S,NH,dqk) v:(B,S,NH,dv).
+        Returns (h:(B,S,NH,dv), (C,n,m))."""
+        B, S, NH, dqk = q.shape
+        dv = v.shape[-1]
+        Q = min(CHUNK, S)
+        assert S % Q == 0
+        nc = S // Q
+
+        def resh(t):
+            return (t.reshape((B, nc, Q) + t.shape[2:])
+                    .transpose((1, 0, 2) + tuple(range(3, t.ndim + 1))))
+        qc, kc, vc = resh(q.astype(jnp.float32)), resh(k.astype(jnp.float32)), \
+            resh(v.astype(jnp.float32))
+        lic, lfc = resh(log_i), resh(log_f)
+
+        if state is None:
+            C0 = jnp.zeros((B, NH, dqk, dv), jnp.float32)
+            n0 = jnp.zeros((B, NH, dqk), jnp.float32)
+            m0 = jnp.full((B, NH), -1e30, jnp.float32)
+        else:
+            C0, n0, m0 = state
+
+        def chunk(carry, inp):
+            C, n, m = carry
+            qq, kk, vv, li, lf = inp                       # (B,Q,...)
+            csf = jnp.cumsum(lf, axis=1)                   # (B,Q,NH) inclusive
+            # intra log-weights b[i,j] = csf_i - csf_j + li_j  (j<=i)
+            bmat = (csf[:, :, None] - csf[:, None, :] + li[:, None, :, :])
+            causal = jnp.tril(jnp.ones((Q, Q), bool))
+            bmat = jnp.where(causal[None, :, :, None], bmat, -jnp.inf)
+            a = csf + m[:, None, :]                        # inter log-scale (B,Q,NH)
+            m_i = jnp.maximum(bmat.max(axis=2), a)         # (B,Q,NH)
+            w_intra = jnp.exp(bmat - m_i[:, :, None, :])   # (B,Q,Q,NH)
+            w_inter = jnp.exp(a - m_i)                     # (B,Q,NH)
+            qk = jnp.einsum("bihq,bjhq->bijh", qq, kk)     # (B,Q,Q,NH)
+            num = (jnp.einsum("bijh,bjhv->bihv", qk * w_intra, vv)
+                   + jnp.einsum("bihq,bhqv->bihv", qq, C) * w_inter[..., None])
+            den = (jnp.einsum("bijh,bjhq->bihq", w_intra, kk)
+                   * qq).sum(-1) + jnp.einsum("bihq,bhq->bih", qq, n) * w_inter
+            h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+            # carry update to end of chunk
+            tot = csf[:, -1]                               # (B,NH)
+            wj = csf[:, -1:, :] - csf + li                 # (B,Q,NH) log w for state
+            m_new = jnp.maximum(m + tot, wj.max(axis=1))
+            scale_old = jnp.exp(m + tot - m_new)
+            wj = jnp.exp(wj - m_new[:, None, :])
+            C = C * scale_old[..., None, None] + jnp.einsum(
+                "bjhq,bjhv->bhqv", kk * wj[..., None], vv)
+            n = n * scale_old[..., None] + (kk * wj[..., None]).sum(1)
+            return (C, n, m_new), h
+
+        (C, n, m), hc = jax.lax.scan(chunk, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+        h = hc.transpose(1, 0, 2, 3, 4).reshape(B, S, NH, dv)
+        return h, (C, n, m)
+
+    def _mlstm_step(self, q, k, v, log_i, log_f, state):
+        """Single decode step. q,k:(B,NH,dqk) v:(B,NH,dv)."""
+        C, n, m = state
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_ = jnp.exp(log_i - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        C = C * f_[..., None, None] + i_[..., None, None] * \
+            jnp.einsum("bhq,bhv->bhqv", k, v)
+        n = n * f_[..., None] + i_[..., None] * k
+        num = jnp.einsum("bhq,bhqv->bhv", q, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", q, n)),
+                          jnp.exp(-m_new))
+        return num / den[..., None], (C, n, m_new)
+
+    def _mlstm_block(self, x, w, state=None, conv_state=None):
+        c = self.cfg
+        B, S, D = x.shape
+        if conv_state is None:
+            q, k, v, li, lf, z, conv_tail = self._mlstm_qkvif(x, w)
+            h, new_state = self._mlstm_chunked(q, k, v, li, lf, state)
+        else:
+            xn = L.rms_norm(x, w["ln"], c.norm_eps)
+            up = xn @ w["w_up"]
+            xm, z = jnp.split(up, 2, axis=-1)
+            K = c.xlstm.conv_kernel
+            win = jnp.concatenate([conv_state, xm.transpose(0, 2, 1)], -1)
+            xc = jax.nn.silu(jnp.einsum("bdk,dk->bd", win, w["conv_w"]))
+            conv_tail = win[:, :, 1:]
+            xh = xc.reshape(B, self.nh, self.d_v)
+            q = jnp.einsum("bhv,hvq->bhq", xh, w["wq"]).astype(jnp.float32)
+            k = (jnp.einsum("bhv,hvq->bhq", xh, w["wk"])
+                 / np.sqrt(self.d_qk)).astype(jnp.float32)
+            v = jnp.einsum("bhv,hvw->bhw",
+                           xm.reshape(B, self.nh, self.d_v),
+                           w["wv"]).astype(jnp.float32)
+            gates = (xc @ w["wif"]).astype(jnp.float32) + w["b_if"]
+            li, lfr = jnp.split(gates, 2, axis=-1)
+            lf = -jax.nn.softplus(-lfr)
+            hh, new_state = self._mlstm_step(q, k, v, li, lf, state)
+            h = hh[:, None]
+        h = h.reshape(B, S, self.d_inner)
+        h = L.rms_norm(h, w["gn"], c.norm_eps)             # multi-head norm
+        h = h * jax.nn.silu(z)
+        return x + (h @ w["w_down"]).astype(x.dtype), (new_state, conv_tail)
+
+    # -- sLSTM ------------------------------------------------------------------
+
+    def _slstm_scan(self, gates_x, w, state):
+        """gates_x: (B,S,4,NH,ph) precomputed input gates; recurrent scan."""
+        B, S = gates_x.shape[0], gates_x.shape[1]
+        ph = self.d_head_s
+
+        def step(carry, gx):
+            cst, nst, hst, mst = carry                     # (B,NH,ph)...
+            rec = jnp.einsum("bhp,hpq->bhq", hst, w["r_ifzo"]).astype(jnp.float32)
+            rec = rec.reshape(B, self.nh, 4, ph).transpose(0, 2, 1, 3)
+            g = gx.astype(jnp.float32) + rec               # (B,4,NH,ph)
+            li, fr, z, o = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+            lf = -jax.nn.softplus(-fr)
+            m_new = jnp.maximum(lf + mst, li)
+            i_ = jnp.exp(li - m_new)
+            f_ = jnp.exp(lf + mst - m_new)
+            cst = f_ * cst + i_ * jnp.tanh(z)
+            nst = f_ * nst + i_
+            hst = jax.nn.sigmoid(o) * cst / jnp.maximum(nst, 1e-6)
+            return (cst, nst, hst, m_new), hst
+
+        carry, hs = jax.lax.scan(step, state, gates_x.transpose(1, 0, 2, 3, 4))
+        return hs.transpose(1, 0, 2, 3), carry             # (B,S,NH,ph)
+
+    def _slstm_block(self, x, w, state=None):
+        c = self.cfg
+        B, S, D = x.shape
+        ph = self.d_head_s
+        xn = L.rms_norm(x, w["ln"], c.norm_eps)
+        gx = (xn @ w["w_ifzo"]).astype(jnp.float32) + w["b_ifzo"]
+        gx = gx.reshape(B, S, 4, self.nh, ph)
+        if state is None:
+            z = jnp.zeros((B, self.nh, ph), jnp.float32)
+            state = (z, z, z, jnp.full((B, self.nh, ph), -1e30, jnp.float32))
+        hs, new_state = self._slstm_scan(gx, w, state)
+        h = hs.reshape(B, S, D)
+        h = L.rms_norm(h, w["gn"], c.norm_eps)
+        x = x + (h @ w["w_out"]).astype(x.dtype)
+        f = L.swiglu(L.rms_norm(x, w["ln2"], c.norm_eps),
+                     w["w_f1"], w["w_f3"], w["w_f2"])
+        return x + f, new_state
+
+    # -- stacked groups -----------------------------------------------------------
+
+    def _stack_params(self, params):
+        """(n_layers_of_type, ...) -> (n_groups, per_group, ...)."""
+        c = self.cfg
+        rm = lambda t: t.reshape((self.n_groups, c.xlstm.m_per_group) + t.shape[1:])
+        rs = lambda t: t.reshape((self.n_groups, c.xlstm.s_per_group) + t.shape[1:])
+        return jax.tree.map(rm, params["mlstm"]), jax.tree.map(rs, params["slstm"])
+
+    def _run_groups(self, params, x, caches=None, decode=False):
+        """caches: dict or None. Returns (x, (mstates, sstates))."""
+        gm, gs = self._stack_params(params)
+
+        def group(x, inp):
+            if decode:
+                wm, ws, cm, cs = inp
+            else:
+                wm, ws = inp
+
+            def m_body(x, wst):
+                if decode:
+                    w, st = wst
+                    state, conv = (st[0], st[1], st[2]), st[3]
+                    x, (nstate, nconv) = self._mlstm_block(x, w, state, conv)
+                else:
+                    w = wst
+                    blk = jax.checkpoint(
+                        lambda x, w: self._mlstm_block(hints.shard(x, "residual"), w))
+                    x, (nstate, nconv) = blk(x, w)
+                return x, (*nstate, nconv)
+            x, mstates = jax.lax.scan(m_body, x, (wm, cm) if decode else wm)
+
+            def s_body(x, wst):
+                if decode:
+                    w, st = wst
+                    x, nst = self._slstm_block(x, w, tuple(st))
+                else:
+                    w = wst
+                    blk = jax.checkpoint(
+                        lambda x, w: self._slstm_block(hints.shard(x, "residual"), w))
+                    x, nst = blk(x, w)
+                return x, nst
+            x, sstates = jax.lax.scan(s_body, x, (ws, cs) if decode else ws)
+            return x, (mstates, sstates)
+
+        if decode:
+            cm = tuple(caches[k] for k in ("m_C", "m_n", "m_m", "m_conv"))
+            cs = tuple(caches[k] for k in ("s_c", "s_n", "s_h", "s_m"))
+            rm = lambda t: t.reshape((self.n_groups, self.cfg.xlstm.m_per_group)
+                                     + t.shape[1:])
+            rs = lambda t: t.reshape((self.n_groups, self.cfg.xlstm.s_per_group)
+                                     + t.shape[1:])
+            cm = jax.tree.map(rm, cm)
+            cs = jax.tree.map(rs, cs)
+            x, states = jax.lax.scan(group, x, (gm, gs, cm, cs))
+        else:
+            x, states = jax.lax.scan(group, x, (gm, gs))
+        return x, states
+
+    # -- public API -----------------------------------------------------------------
+
+    def loss(self, params, batch) -> jax.Array:
+        c = self.cfg
+        x = params["emb"][batch["tokens"]]
+        x, _ = self._run_groups(params, x)
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = hints.shard(
+            jnp.einsum("bsd,vd->bsv", x, params["lm_head"]), "logits")
+        return L.softmax_xent(logits, batch["targets"], batch.get("loss_mask"))
+
+    def init_cache(self, batch: int, seq_len: int) -> Dict:
+        c = self.cfg
+        nm = self.n_groups * c.xlstm.m_per_group
+        ns = self.n_groups * c.xlstm.s_per_group
+        ph = self.d_head_s
+        f32 = jnp.float32
+        return dict(
+            m_C=jnp.zeros((nm, batch, self.nh, self.d_qk, self.d_v), f32),
+            m_n=jnp.zeros((nm, batch, self.nh, self.d_qk), f32),
+            m_m=jnp.full((nm, batch, self.nh), -1e30, f32),
+            m_conv=jnp.zeros((nm, batch, self.d_inner,
+                              c.xlstm.conv_kernel - 1), self.dtype),
+            s_c=jnp.zeros((ns, batch, self.nh, ph), f32),
+            s_n=jnp.zeros((ns, batch, self.nh, ph), f32),
+            s_h=jnp.zeros((ns, batch, self.nh, ph), f32),
+            s_m=jnp.full((ns, batch, self.nh, ph), -1e30, f32),
+            len=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def prefill(self, params, tokens):
+        c = self.cfg
+        B, S = tokens.shape
+        x = params["emb"][tokens]
+        x, (mstates, sstates) = self._run_groups(params, x)
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"])
+        mC, mn, mm, mconv = mstates
+        sc, sn, sh, sm = sstates
+        flat = lambda t: t.reshape((-1,) + t.shape[2:])
+        cache = dict(
+            m_C=flat(mC), m_n=flat(mn), m_m=flat(mm), m_conv=flat(mconv),
+            s_c=flat(sc), s_n=flat(sn), s_h=flat(sh), s_m=flat(sm),
+            len=jnp.full((B,), S, jnp.int32),
+        )
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        c = self.cfg
+        B = tokens.shape[0]
+        x = params["emb"][tokens[:, None]]
+        x, (mstates, sstates) = self._run_groups(params, x, cache, decode=True)
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, 0], params["lm_head"])
+        mC, mn, mm, mconv = mstates
+        sc, sn, sh, sm = sstates
+        flat = lambda t: t.reshape((-1,) + t.shape[2:])
+        new_cache = dict(
+            m_C=flat(mC), m_n=flat(mn), m_m=flat(mm), m_conv=flat(mconv),
+            s_c=flat(sc), s_n=flat(sn), s_h=flat(sh), s_m=flat(sm),
+            len=cache["len"] + 1,
+        )
+        return logits, new_cache
+
+    def input_specs(self, cell: ShapeCell) -> Dict:
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        if cell.kind == "train":
+            return dict(tokens=jax.ShapeDtypeStruct((B, S), i32),
+                        targets=jax.ShapeDtypeStruct((B, S), i32))
+        if cell.kind == "prefill":
+            return dict(tokens=jax.ShapeDtypeStruct((B, S), i32))
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        return dict(cache=cache, tokens=jax.ShapeDtypeStruct((B,), i32))

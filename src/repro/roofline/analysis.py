@@ -1,0 +1,113 @@
+"""Three-term roofline per (arch x shape) from the dry-run artifacts.
+
+  compute    = FLOPs_per_device / peak_FLOPs            (197 TFLOP/s bf16)
+  memory     = HBM_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = link_bytes_per_device / ICI_link_bw      (~50 GB/s/link)
+
+FLOPs/bytes come from the while-aware HLO parser (roofline/hlo_cost.py) over
+the compiled single-pod module — all numbers are PER DEVICE per step.
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode) over active params;
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/attention/dispatch overhead.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_ratio: float      # useful / compiled
+    mem_gb: float
+    fits: bool
+    coll_breakdown: Dict[str, float]
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the dominant term is to being the *only* cost if the
+        three overlapped perfectly: compute_s / step_s when compute-bound
+        measures MFU headroom; we report compute_s/step_s as 'useful
+        fraction' of the bounding resource."""
+        return self.compute_s / max(self.step_s, 1e-30)
+
+
+def load_row(arch: str, shape: str, mesh: str = "single",
+             results: Path = RESULTS) -> Optional[RooflineRow]:
+    f = results / f"{arch}__{shape}__{mesh}.json"
+    if not f.exists():
+        return None
+    d = json.loads(f.read_text())
+    if d.get("skipped"):
+        return None
+    if not d.get("ok"):
+        return None
+    p = d["parsed"]
+    n_dev = d["n_devices"]
+    comp = p["flops"] / PEAK_FLOPS
+    mem = p["hbm_bytes"] / HBM_BW
+    coll = p["total_coll_bytes"] / ICI_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    bott = max(terms, key=terms.get)
+    useful = d["model_flops_global"] / n_dev
+    return RooflineRow(
+        arch=arch, shape=shape, compute_s=comp, memory_s=mem,
+        collective_s=coll, bottleneck=bott,
+        model_flops_ratio=useful / max(p["flops"], 1e-30),
+        mem_gb=d["memory"].get("total_donated_gb", d["memory"]["total_gb"]),
+        fits=d["fits_hbm_16gb"],
+        coll_breakdown={k: v / ICI_BW for k, v in p["coll_bytes"].items()})
+
+
+def all_rows(results: Path = RESULTS) -> List[RooflineRow]:
+    from repro.configs import ARCHS, shapes_for
+    rows = []
+    for arch in sorted(ARCHS):
+        for cell in shapes_for(ARCHS[arch]):
+            r = load_row(arch, cell.name, results=results)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def format_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'bound':>10s} {'useful/HLO':>10s} "
+           f"{'mem_GB':>7s} fits")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.compute_s:10.4f} "
+            f"{r.memory_s:10.4f} {r.collective_s:10.4f} {r.bottleneck:>10s} "
+            f"{r.model_flops_ratio:10.3f} {r.mem_gb:7.1f} "
+            f"{'Y' if r.fits else 'N'}")
+    return "\n".join(lines)
+
+
+def main():
+    rows = all_rows()
+    print(format_table(rows))
+    print(f"\n{len(rows)} cells; bottleneck histogram: ", end="")
+    from collections import Counter
+    print(dict(Counter(r.bottleneck for r in rows)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Roofline-calibrated cost model for a v5e serving replica (16 chips).
+
+Every timing the simulator uses comes from here; constants match the
+roofline analysis (197 TFLOP/s bf16, 819 GB/s HBM per chip) plus host/disk/
+interconnect bandwidths for the tiered KV store.  The dry-run's roofline
+terms (results/dryrun/*.json) can be loaded to calibrate the efficiency
+factors; defaults are conservative fractions of peak.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    chips_per_replica: int = 16
+    peak_flops: float = 197e12          # per chip, bf16
+    hbm_bw: float = 819e9               # per chip
+    hbm_bytes: float = 16e9             # per chip
+    ici_bw: float = 50e9                # per link (peer replica, same pod)
+    d2h_bw: float = 25e9                # HBM <-> host DRAM (per host)
+    disk_bw: float = 3e9                # NVMe spool
+    dcn_bw: float = 12.5e9              # cross-pod per host
+    host_dram: float = 256e9            # per replica host budget
+    mfu_prefill: float = 0.45           # achievable fraction of peak
+    mfu_decode_mem: float = 0.7         # achieved HBM bw fraction
+
+
+class CostModel:
+    def __init__(self, cfg: ModelConfig, hw: HardwareSpec = HardwareSpec()):
+        self.cfg = cfg
+        self.hw = hw
+        c = cfg
+        self.n_params = None    # lazy (needs model)
+        dtype_bytes = 2
+        if c.family in ("hybrid",):
+            s = c.ssm
+            d_inner = s.expand * c.d_model
+            nh = d_inner // s.head_dim
+            conv_dim = d_inner + 2 * s.n_groups * s.d_state
+            self.fixed_state_bytes = c.n_layers * (
+                nh * s.d_state * s.head_dim * 4 + conv_dim * (s.d_conv - 1) * 2)
+            napps = c.n_layers // c.shared_every
+            self.kv_bytes_token = napps * 2 * c.kv_dim * dtype_bytes
+            self.kv_window = c.sliding_window or 1 << 30
+        elif c.family == "xlstm":
+            x = c.xlstm
+            d_v = int(c.d_head * x.proj_factor)
+            d_inner = c.n_heads * d_v
+            nm = c.n_layers * x.m_per_group // (x.m_per_group + x.s_per_group)
+            ns = c.n_layers - nm
+            self.fixed_state_bytes = int(
+                nm * (c.n_heads * c.d_head * d_v + c.n_heads * c.d_head
+                      + d_inner * 3) * 4
+                + ns * 4 * c.d_model * 4)
+            self.kv_bytes_token = 0
+            self.kv_window = 0
+        else:
+            self.fixed_state_bytes = 0
+            self.kv_bytes_token = c.n_layers * 2 * c.kv_dim * dtype_bytes
+            self.kv_window = 1 << 30
+
+    # -- sizes --------------------------------------------------------------------
+
+    def set_param_count(self, n_params: int, n_active: Optional[int] = None):
+        self.n_params = n_params
+        self.n_active = n_active or n_params
+
+    def _ensure_params(self):
+        if self.n_params is None:
+            from repro.models.registry import get_model
+            m = get_model(self.cfg)
+            self.n_params = m.param_count()
+            self.n_active = m.active_param_count()
+
+    def param_bytes(self) -> float:
+        self._ensure_params()
+        return self.n_params * 2
+
+    def session_kv_bytes(self, tokens: int) -> float:
+        return (self.fixed_state_bytes
+                + min(tokens, self.kv_window) * self.kv_bytes_token)
+
+    def hbm_kv_budget(self) -> float:
+        hw = self.hw
+        return (hw.hbm_bytes * hw.chips_per_replica - self.param_bytes()) * 0.9
+
+    # -- step times ------------------------------------------------------------------
+
+    def prefill_time(self, new_tokens: int, cached_tokens: int = 0) -> float:
+        """Compute-bound; attention quadratic in (cached + new)."""
+        self._ensure_params()
+        hw = self.hw
+        flops = 2 * self.n_active * new_tokens
+        # attention scores+values against full context
+        ctx = cached_tokens + new_tokens / 2
+        flops += 4 * self.cfg.n_layers * new_tokens * min(ctx, self.kv_window) \
+            * self.cfg.q_dim
+        return flops / (hw.chips_per_replica * hw.peak_flops * hw.mfu_prefill)
+
+    def decode_step_time(self, batch: int, total_ctx_tokens: int) -> float:
+        """max(compute, memory) per single-token iteration for the batch."""
+        self._ensure_params()
+        hw = self.hw
+        flops = 2 * self.n_active * batch
+        t_c = flops / (hw.chips_per_replica * hw.peak_flops * 0.5)
+        kv = (self.fixed_state_bytes * batch
+              + min(total_ctx_tokens, batch * self.kv_window)
+              * self.kv_bytes_token)
+        t_m = (self.param_bytes() + kv) / (
+            hw.chips_per_replica * hw.hbm_bw * hw.mfu_decode_mem)
+        return max(t_c, t_m)
+
+    # -- transfers ---------------------------------------------------------------------
+
+    def transfer_time(self, nbytes: float, kind: str) -> float:
+        hw = self.hw
+        bw = {"h2d": hw.d2h_bw, "d2h": hw.d2h_bw,
+              "disk_r": hw.disk_bw, "disk_w": hw.disk_bw,
+              "peer": hw.ici_bw, "xpod": hw.dcn_bw}[kind]
+        return nbytes / bw + 0.0002          # small fixed RPC overhead
+
+    def layerwise_stall(self, n_layers_to_fetch: int, bytes_per_layer: float,
+                        kind: str, step_time: float, n_layers: int) -> float:
+        """Residual critical-path stall of layer-wise async reads (SS3.3):
+        fetches stream in layer order while compute walks the layers; the
+        stall is how far the fetch pipeline falls behind the compute walk."""
+        if n_layers_to_fetch == 0:
+            return 0.0
+        per_layer_compute = step_time / n_layers
+        per_layer_fetch = self.transfer_time(bytes_per_layer, kind)
+        # fetch i completes at (i+1)*fetch; compute needs layer i at i*compute
+        stall = 0.0
+        for i in range(n_layers_to_fetch):
+            stall = max(stall, (i + 1) * per_layer_fetch - i * per_layer_compute)
+        return stall
+
+
+def load_roofline_calibration(results_dir: Path, arch: str) -> Optional[dict]:
+    """Pull the dry-run decode/prefill roofline terms for calibration."""
+    out = {}
+    for shape in ("decode_32k", "prefill_32k"):
+        f = Path(results_dir) / f"{arch}__{shape}__single.json"
+        if f.exists():
+            d = json.loads(f.read_text())
+            if d.get("ok"):
+                out[shape] = d
+    return out or None

@@ -1,0 +1,120 @@
+"""Node-local paged KV-cache allocator (vLLM-style block tables, TPU-shaped).
+
+Pages are the unit of everything in SYMPHONY's node manager: allocation,
+tier placement, migration, and the Pallas paged_attention kernel's block
+tables.  This allocator owns the *physical* page pool of one node and hands
+out per-sequence block tables; the TieredKVStore (core/memory.py) tracks
+which tier each (session, layer) page group lives in.
+
+Design notes vs the GPU original (DESIGN.md §3): the pool is a dense
+(P, page_size, Hkv, D) array per layer — static shape for XLA — and the
+block table is the only indirection; copy-on-migrate swaps page *contents*,
+never remaps live tables mid-step (tables are step inputs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclass
+class SeqAlloc:
+    seq_id: str
+    pages: List[int] = field(default_factory=list)
+    n_tokens: int = 0
+
+
+class PagedAllocator:
+    """Physical page bookkeeping for one node (one pool per layer group)."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.free_list: List[int] = list(range(n_pages - 1, -1, -1))
+        self.seqs: Dict[str, SeqAlloc] = {}
+        self.stats = dict(allocs=0, frees=0, peak_used=0)
+
+    # -- capacity ----------------------------------------------------------------
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self.free_list)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return (n_tokens + self.page_size - 1) // self.page_size
+
+    def can_fit(self, n_tokens: int, seq_id: Optional[str] = None) -> bool:
+        have = self.seqs[seq_id].pages if seq_id in self.seqs else []
+        need = self.pages_for((self.seqs[seq_id].n_tokens if seq_id in
+                               self.seqs else 0) + n_tokens) - len(have)
+        return need <= len(self.free_list)
+
+    # -- alloc / extend / free -----------------------------------------------------
+
+    def allocate(self, seq_id: str, n_tokens: int) -> SeqAlloc:
+        assert seq_id not in self.seqs
+        self.seqs[seq_id] = SeqAlloc(seq_id)
+        return self.extend(seq_id, n_tokens)
+
+    def extend(self, seq_id: str, new_tokens: int) -> SeqAlloc:
+        s = self.seqs[seq_id]
+        target = self.pages_for(s.n_tokens + new_tokens)
+        need = target - len(s.pages)
+        if need > len(self.free_list):
+            raise OutOfPages(
+                f"{seq_id}: need {need} pages, have {len(self.free_list)}")
+        for _ in range(need):
+            s.pages.append(self.free_list.pop())
+            self.stats["allocs"] += 1
+        s.n_tokens += new_tokens
+        self.stats["peak_used"] = max(self.stats["peak_used"], self.used_pages)
+        return s
+
+    def free(self, seq_id: str) -> int:
+        s = self.seqs.pop(seq_id, None)
+        if s is None:
+            return 0
+        self.free_list.extend(reversed(s.pages))
+        self.stats["frees"] += len(s.pages)
+        return len(s.pages)
+
+    def truncate(self, seq_id: str, n_tokens: int) -> None:
+        """Release tail pages (e.g. after demoting part of a session)."""
+        s = self.seqs[seq_id]
+        keep = self.pages_for(n_tokens)
+        while len(s.pages) > keep:
+            self.free_list.append(s.pages.pop())
+            self.stats["frees"] += 1
+        s.n_tokens = min(s.n_tokens, n_tokens)
+
+    # -- kernel interface -------------------------------------------------------------
+
+    def block_table(self, seq_id: str, max_pages: Optional[int] = None
+                    ) -> np.ndarray:
+        """Padded int32 block table row for the paged_attention kernel."""
+        s = self.seqs[seq_id]
+        width = max_pages or len(s.pages)
+        out = np.zeros((width,), np.int32)
+        out[:len(s.pages)] = s.pages
+        return out
+
+    def batch_block_tables(self, seq_ids: List[str]) -> np.ndarray:
+        width = max((len(self.seqs[s].pages) for s in seq_ids), default=1)
+        return np.stack([self.block_table(s, width) for s in seq_ids])
+
+    def ctx_lens(self, seq_ids: List[str]) -> np.ndarray:
+        return np.asarray([self.seqs[s].n_tokens for s in seq_ids], np.int32)
+
+    # -- invariant ----------------------------------------------------------------------
+
+    def check(self) -> None:
+        owned = [p for s in self.seqs.values() for p in s.pages]
+        assert len(owned) == len(set(owned)), "double-owned page"
+        assert len(owned) + len(self.free_list) == self.n_pages, "leak"
+        assert set(owned).isdisjoint(self.free_list), "freed-in-use page"

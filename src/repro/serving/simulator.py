@@ -1,0 +1,210 @@
+"""Discrete-event cluster simulator: SYMPHONY scheduler + node managers +
+continuous-batching engines over the v5e cost model.
+
+Drives the paper's experiments at 8-replica (and larger) scale: normalized
+latency / TTFT / TPOT vs concurrent users, load imbalance, prefill-heavy
+ablation, missing advisories, prioritization.  Time is virtual seconds.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.advisory import AdvisoryRequest, InferenceRequest
+from repro.core.node_manager import NodeManager
+from repro.core.policies import POLICIES, Policy
+from repro.core.scheduler import SymphonyScheduler
+from repro.serving.cost_model import CostModel, HardwareSpec
+from repro.traces.sharegpt import Trace
+
+
+@dataclass
+class SimResult:
+    completed: List[InferenceRequest]
+    node_load_samples: List[List[int]]      # periodic per-node outstanding
+    stats: dict
+
+    def mean(self, attr: str) -> float:
+        vals = [getattr(r, attr) for r in self.completed
+                if getattr(r, attr) is not None]
+        return sum(vals) / max(len(vals), 1)
+
+    def p99(self, attr: str) -> float:
+        vals = sorted(v for v in (getattr(r, attr) for r in self.completed)
+                      if v is not None)
+        if not vals:
+            return 0.0
+        return vals[min(len(vals) - 1, int(0.99 * len(vals)))]
+
+    @property
+    def throughput(self) -> float:
+        if not self.completed:
+            return 0.0
+        t_end = max(r.finished_at for r in self.completed)
+        return len(self.completed) / max(t_end, 1e-9)
+
+    def load_imbalance(self) -> dict:
+        """Paper Fig. 1/14 metric: requests per server, max vs median vs min,
+        time-averaged over samples where the cluster is loaded."""
+        import numpy as np
+        if not self.node_load_samples:
+            return dict(max=0, median=0, min=0, ratio=1.0)
+        arr = np.array(self.node_load_samples)          # (samples, nodes)
+        active = arr[arr.max(axis=1) >= 1]
+        if len(active) == 0:
+            return dict(max=0, median=0, min=0, ratio=1.0)
+        per_node = active.mean(axis=0)
+        med = float(np.median(per_node))
+        return dict(max=float(per_node.max()), median=med,
+                    min=float(per_node.min()),
+                    ratio=float(per_node.max() / max(med, 1e-9)))
+
+
+class ClusterSim:
+    def __init__(self, cfg: ModelConfig, n_nodes: int = 8,
+                 policy: str = "symphony", hw: HardwareSpec = HardwareSpec(),
+                 max_batch: int = 32, nodes_per_pod: int = 16,
+                 advisory_to_hbm: bool = True):
+        self.cfg = cfg
+        self.cost = CostModel(cfg, hw)
+        self.policy: Policy = POLICIES[policy]
+        self.sched = SymphonyScheduler(n_nodes, self.policy)
+        pod_of = lambda n: n // nodes_per_pod
+        self.managers: Dict[int, NodeManager] = {
+            i: NodeManager(i, cfg, self.cost, pod_of=pod_of)
+            for i in range(n_nodes)}
+        for i, m in self.managers.items():
+            m.register_peers(self.managers)
+            self.sched.register_node_manager(i, m)
+        from repro.serving.engine import NodeEngine
+        self.engines: Dict[int, "NodeEngine"] = {
+            i: NodeEngine(i, cfg, self.cost, self.managers[i],
+                          max_batch=max_batch,
+                          policy_reuses_kv=self.policy.reuses_kv,
+                          swap_on_preempt=self.policy.name != "stateless")
+            for i in range(n_nodes)}
+        self.advisory_to_hbm = advisory_to_hbm
+
+    # -- main loop --------------------------------------------------------------------
+
+    def run(self, trace: Trace, sample_every: float = 5.0,
+            fail_node_at: Optional[tuple] = None) -> SimResult:
+        """trace: iterable of (time, kind, payload) events, time-sorted."""
+        eq: list = []
+        seq = itertools.count()
+        for t, kind, payload in trace.events():
+            heapq.heappush(eq, (t, next(seq), kind, payload))
+        node_busy_until = {i: 0.0 for i in self.engines}
+        load_samples: List[List[int]] = []
+        next_sample = 0.0
+        completed: List[InferenceRequest] = []
+        inflight_done = {}
+
+        if fail_node_at is not None:
+            heapq.heappush(eq, (fail_node_at[1], next(seq), "fail",
+                                fail_node_at[0]))
+
+        def schedule_node(i: int, now: float):
+            eng = self.engines[i]
+            if not (eng.waiting or eng.running):
+                return
+            start = max(now, node_busy_until[i])
+            heapq.heappush(eq, (start, next(seq), "step", i))
+
+        while eq:
+            now, _, kind, payload = heapq.heappop(eq)
+            while next_sample <= now:
+                load_samples.append(
+                    [self.engines[i].load for i in sorted(self.engines)])
+                next_sample += sample_every
+
+            if kind == "advisory":
+                adv: AdvisoryRequest = payload
+                adv.issued_at = now
+                if self.policy.uses_advisory:
+                    meta = self.sched.session(adv.session_id)
+                    to_hbm = self.advisory_to_hbm and (
+                        not self.policy.prefetch_to_hbm_priority_only
+                        or (adv.priority or 0) > 0)
+                    target = self.sched.policy.place(self.sched, meta, True)
+                    if target is not None:
+                        self.sched.planned[adv.session_id] = target
+                        self.managers[target].on_advisory(
+                            adv, kv_node=meta.kv_node, now=now, to_hbm=to_hbm)
+
+            elif kind == "request":
+                req: InferenceRequest = payload
+                req.arrival = now
+                node = self.sched.route(req, now)
+                # no advisory was sent / sticky: on-demand migration cost sits
+                # on the critical path via kv_stall inside the engine
+                meta = self.sched.session(req.session_id)
+                if (self.policy.reuses_kv and meta.kv_node is not None
+                        and meta.kv_node != node
+                        and req.session_id not in self.managers[node].store.entries):
+                    adv = AdvisoryRequest(req.session_id)
+                    self.managers[node].on_advisory(
+                        adv, kv_node=meta.kv_node, now=now, to_hbm=True)
+                self.engines[node].submit(req)
+                schedule_node(node, now)
+
+            elif kind == "step":
+                i = payload
+                if now < node_busy_until[i] - 1e-12:
+                    heapq.heappush(eq, (node_busy_until[i], next(seq),
+                                        "step", i))
+                    continue
+                eng = self.engines[i]
+                before = {id(r.req) for r in eng.running}
+                n_done_before = len(eng.completed)
+                dt = eng.step(now)
+                node_busy_until[i] = now + dt
+                self.sched.report_step_latency(i, dt)
+                for req in eng.completed[n_done_before:]:
+                    total = req.cached_tokens + req.prompt_tokens + req.generated
+                    self.sched.on_request_complete(req, total)
+                    if self.policy.reuses_kv:
+                        self.managers[i].mark_resident(
+                            req.session_id, total,
+                            self.cost.session_kv_bytes(total) / self.cfg.n_layers,
+                            req.priority)
+                    completed.append(req)
+                    cb = inflight_done.get(req.session_id)
+                    if cb:
+                        for t, k, p in cb(req, now + dt):
+                            heapq.heappush(eq, (t, next(seq), k, p))
+                        inflight_done.pop(req.session_id, None)
+                schedule_node(i, now + dt)
+
+            elif kind == "chain":
+                # trace callback: schedule follow-up events once a given
+                # session's current request completes
+                sid, cb = payload
+                inflight_done[sid] = cb
+
+            elif kind == "fail":
+                i = payload
+                orphans = self.sched.mark_failed(i)
+                self.managers[i].crash()
+                eng = self.engines[i]
+                for r in list(eng.running) + list(eng.waiting):
+                    rr = r.req if hasattr(r, "req") else r
+                    rr.cached_tokens = 0
+                    rr.node_id = None
+                    node = self.sched.route(rr, now)
+                    self.engines[node].submit(rr)
+                    schedule_node(node, now)
+                eng.running.clear()
+                eng.waiting.clear()
+
+            elif kind == "end":
+                self.sched.end_session(payload)
+
+        stats = dict(
+            engine={i: dict(self.engines[i].stats) for i in self.engines},
+            manager={i: dict(self.managers[i].stats) for i in self.managers},
+        )
+        return SimResult(completed, load_samples, stats)

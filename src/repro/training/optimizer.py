@@ -1,0 +1,89 @@
+"""Sharded AdamW with fp32 master weights (mixed-precision training).
+
+Optimizer state (mu/nu/master, all fp32) is ZeRO-1-sharded: the ShardingPlan
+adds a ``data``-axis shard on top of each parameter's TP spec.  Optional int8
+gradient compression lives in training/compression.py (shard_map-based).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params) -> Dict:
+    f32 = lambda p: p.astype(jnp.float32)
+    return dict(
+        mu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        nu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        master=jax.tree.map(f32, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig) -> Tuple[Dict, Dict]:
+    step = state["step"] + 1
+    # global-norm clip (fp32)
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g32)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(m, v, w, g):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        w = w - cfg.lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * w)
+        return m, v, w
+
+    out = jax.tree.map(upd, state["mu"], state["nu"], state["master"], g32)
+    mu = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    return new_params, dict(mu=mu, nu=nu, master=master, step=step)
+
+
+def make_train_step(model, cfg: AdamWConfig = AdamWConfig(),
+                    n_microbatches: int = 8):
+    """Gradient-accumulation train step: scan over microbatches (bounds
+    activation memory — remat boundaries scale with microbatch size), then
+    one AdamW update.  n_microbatches=1 disables accumulation."""
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_microbatches, x.shape[0] // n_microbatches)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb(acc, mbatch):
+                l, g = jax.value_and_grad(model.loss)(params, mbatch)
+                acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32),
+                                   acc, g)
+                return acc, l
+            grads, losses = jax.lax.scan(mb, g0, micro)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = losses.mean()
+        params, opt_state = adamw_update(params, grads, opt_state, cfg)
+        return params, opt_state, loss
+    return train_step

@@ -1,0 +1,50 @@
+"""Integration gate over the multi-pod dry-run artifacts: every
+(arch x shape x mesh) cell must have compiled OK (or be an explicit
+documented skip).  Skipped when results/dryrun has not been generated
+(fresh clone) — run ``python -m repro.launch.dryrun --all`` first."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ALL_SHAPES, ARCHS, shapes_for
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+@pytest.mark.skipif(not RESULTS.exists() or not any(RESULTS.glob("*.json")),
+                    reason="dry-run artifacts not generated")
+def test_all_cells_compiled():
+    missing, failed = [], []
+    n_ok = n_skip = 0
+    for arch, cfg in ARCHS.items():
+        for cell in ALL_SHAPES:
+            for mesh in ("single", "multi"):
+                f = RESULTS / f"{arch}__{cell.name}__{mesh}.json"
+                if not f.exists():
+                    missing.append(f.name)
+                    continue
+                d = json.loads(f.read_text())
+                if d.get("skipped"):
+                    assert cell not in shapes_for(cfg), f.name
+                    n_skip += 1
+                elif d.get("ok"):
+                    n_ok += 1
+                    assert d["parsed"]["flops"] > 0, f.name
+                    assert d["parsed"]["unknown_trip_whiles"] == 0, f.name
+                else:
+                    failed.append(f.name)
+    assert not missing, missing
+    assert not failed, failed
+    assert n_ok == 64 and n_skip == 16, (n_ok, n_skip)
+
+
+@pytest.mark.skipif(not RESULTS.exists() or not any(RESULTS.glob("*.json")),
+                    reason="dry-run artifacts not generated")
+def test_roofline_rows_complete():
+    from repro.roofline.analysis import all_rows
+    rows = all_rows()
+    assert len(rows) == 32          # 10 archs x shapes minus long_500k skips
+    for r in rows:
+        assert r.step_s > 0
+        assert r.bottleneck in ("compute", "memory", "collective")

@@ -1,0 +1,75 @@
+"""End-to-end simulator behaviour: the paper's qualitative claims must hold
+on small traces (full-scale numbers live in benchmarks/)."""
+import pytest
+
+from repro.configs import get_config
+from repro.serving.cost_model import HardwareSpec
+from repro.serving.simulator import ClusterSim
+from repro.traces.agents import MetaGPTTrace
+from repro.traces.sharegpt import ShareGPTTrace
+
+CFG = get_config("llama3-8b")
+HW = HardwareSpec(chips_per_replica=2, host_dram=64e9)
+
+
+def _run(policy, users=96, sessions=220, seed=0, **kw):
+    sim = ClusterSim(CFG, n_nodes=4, policy=policy, hw=HW, **kw)
+    return sim.run(ShareGPTTrace(n_users=users, n_sessions=sessions,
+                                 seed=seed))
+
+
+def test_recompute_wastes_tokens_symphony_doesnt():
+    r_sym = _run("symphony")
+    r_vllm = _run("stateless")
+    red_sym = sum(e["redundant_tokens"] for e in r_sym.stats["engine"].values())
+    red_vllm = sum(e["redundant_tokens"] for e in r_vllm.stats["engine"].values())
+    assert red_sym == 0
+    assert red_vllm > 0
+    # paper Fig 6: the redundant fraction is large on multi-turn traces
+    pre_vllm = sum(e["prefill_tokens"] for e in r_vllm.stats["engine"].values())
+    assert red_vllm / pre_vllm > 0.5
+
+
+def test_symphony_beats_recompute_latency():
+    r_sym = _run("symphony")
+    r_vllm = _run("stateless")
+    assert r_sym.mean("ttft") < r_vllm.mean("ttft")
+    assert r_sym.mean("normalized_latency") <= \
+        r_vllm.mean("normalized_latency") * 1.05
+
+
+def test_advisory_miss_degrades_latency():
+    r0 = _run("symphony")
+    r_all_missed = ClusterSim(CFG, n_nodes=4, policy="symphony", hw=HW).run(
+        ShareGPTTrace(n_users=96, n_sessions=220, seed=0,
+                      advisory_miss_rate=1.0))
+    s0 = sum(e["stall_s"] for e in r0.stats["engine"].values())
+    s1 = sum(e["stall_s"] for e in r_all_missed.stats["engine"].values())
+    assert s1 >= s0
+
+
+def test_sticky_sessions_stay_put():
+    r = _run("sticky")
+    # every request of a session must have been served by one node
+    by_sess = {}
+    for req in r.completed:
+        by_sess.setdefault(req.session_id, set()).add(req.node_id)
+    multi = [s for s, nodes in by_sess.items() if len(nodes) > 1]
+    assert not multi
+
+
+def test_node_failure_recovery():
+    sim = ClusterSim(CFG, n_nodes=4, policy="symphony", hw=HW)
+    trace = ShareGPTTrace(n_users=64, n_sessions=150, seed=3)
+    res = sim.run(trace, fail_node_at=(1, 60.0))
+    assert not sim.sched.nodes[1].alive
+    # the cluster kept serving: completions exist after the failure
+    after = [r for r in res.completed if r.finished_at > 60.0]
+    assert len(after) > 0
+    assert all(r.node_id != 1 for r in after)
+
+
+def test_agent_trace_runs():
+    sim = ClusterSim(CFG, n_nodes=4, policy="symphony", hw=HW)
+    res = sim.run(MetaGPTTrace(n_projects=4, seed=0))
+    assert len(res.completed) == 4 * (1 + 3 + 3 * (1 + 3))
