@@ -1,0 +1,28 @@
+"""Repo-root pytest bootstrap.
+
+Two jobs, both required for `python -m pytest -x -q` to work from a clean
+checkout with only requirements-dev.txt installed:
+
+1. put ``src/`` on ``sys.path`` so ``import repro`` resolves without an
+   external ``PYTHONPATH=src`` (the repo is run-from-source, not installed);
+2. if the real ``hypothesis`` package is unavailable (minimal containers),
+   register the API-compatible stub from ``tests/_hypothesis_stub.py`` so
+   the property tests still collect and run (on a fixed-seed sample of
+   examples instead of hypothesis' guided search).
+"""
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent
+_SRC = str(_ROOT / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _tests = str(_ROOT / "tests")
+    if _tests not in sys.path:
+        sys.path.insert(0, _tests)
+    import _hypothesis_stub
+    _hypothesis_stub.install()

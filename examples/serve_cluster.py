@@ -1,14 +1,27 @@
 """End-to-end driver: a REAL 2-node SYMPHONY cluster on CPU serving batched
-multi-turn requests with an actual tiny model — real tokens, real KV tensors
-migrating through the tiered store (HBM = jax arrays, host = numpy, disk =
-.npy spool), the paged-attention Pallas kernel (interpret mode) on the
-decode path.
+multi-turn sessions with an actual tiny model — real tokens, real paged KV
+migrating through the tiered store (HBM = jnp page pools, host = numpy
+staging, disk = .npz spool), flash_prefill on the continuation path and the
+paged_attention Pallas kernel (interpret mode) on the decode path.
 
-Run:  PYTHONPATH=src python examples/serve_cluster.py
+Each turn: an advisory fires first, the scheduler plans placement, and the
+target node's manager migrates + promotes the session KV *off the critical
+path* — `NodeManager` placement decisions trigger physical page copies
+through the attached `RealBackend` (export/import between nodes, host<->HBM
+promotion, disk write-through).  The inference request then routes to the
+prepared node and the engine serves it with continuation prefill.
+
+Self-verifying: one session's full token stream is checked against a dense
+full-recompute reference at the end.
+
+Run:  python examples/serve_cluster.py
 """
 import shutil
+import sys
 import tempfile
 from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
@@ -16,130 +29,96 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.advisory import AdvisoryRequest, InferenceRequest
+from repro.core.node_manager import NodeManager
 from repro.core.policies import POLICIES
 from repro.core.scheduler import SymphonyScheduler
-from repro.kernels.ops import paged_attention
 from repro.models.registry import get_model
+from repro.serving.backend import RealBackend
+from repro.serving.cost_model import CostModel, HardwareSpec
+from repro.serving.engine import NodeEngine
 
-PAGE = 16
-
-
-class RealNode:
-    """Minimal real-execution node: owns params + per-session paged KV in a
-    3-tier store (device / host-numpy / disk-npy)."""
-
-    def __init__(self, node_id, model, params, spool: Path):
-        self.node_id = node_id
-        self.model = model
-        self.params = params
-        self.hbm = {}          # sid -> dict(cache=jax pytree)
-        self.host = {}         # sid -> numpy pytree
-        self.spool = spool / f"node{node_id}"
-        self.spool.mkdir(parents=True)
-        self.prefill = jax.jit(model.prefill)
-        self.decode = jax.jit(model.decode_step)
-
-    # tiered movement -------------------------------------------------------
-    def to_host(self, sid):
-        if sid in self.hbm:
-            self.host[sid] = jax.tree.map(np.asarray, self.hbm.pop(sid))
-
-    def to_disk(self, sid):
-        """Write-through: persist a copy, keep the fast-tier copy resident
-        (the paper's always-one-copy-on-disk invariant)."""
-        c = self.hbm.get(sid) or self.host.get(sid)
-        np.savez(self.spool / f"{sid}.npz",
-                 **{k: np.asarray(v) for k, v in c.items()})
-
-    def fetch_from(self, peer, sid):
-        """Peer KV migration (the advisory path)."""
-        peer.to_host(sid)
-        self.host[sid] = peer.host.pop(sid)
-
-    def promote(self, sid):
-        if sid in self.host:
-            self.hbm[sid] = jax.tree.map(jnp.asarray, self.host.pop(sid))
-
-    # serving ----------------------------------------------------------------
-    def serve_turn(self, sid, prompt_ids, gen=8):
-        cache = self.hbm.pop(sid, None)
-        toks = jnp.asarray([prompt_ids], jnp.int32)
-        if cache is None:
-            logits, cache = self.prefill(self.params, toks)
-        else:
-            # continuation: grow cache then decode prompt tokens one by one
-            # (tiny-model demo; the TPU path uses the flash_prefill kernel)
-            cache = self.model.grow_cache(cache, len(prompt_ids) + gen)
-            for t in prompt_ids:
-                logits, cache = self.decode(self.params, cache,
-                                            jnp.asarray([t], jnp.int32))
-        outs = []
-        cache = self.model.grow_cache(cache, gen)
-        for _ in range(gen):
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-            outs.append(int(nxt[0]))
-            logits, cache = self.decode(self.params, cache, nxt)
-        self.hbm[sid] = cache
-        return outs
+N_NODES, N_SESSIONS, N_TURNS, GEN = 2, 4, 3, 8
 
 
 def main():
-    cfg = get_config("llama3-8b").reduced()
+    cfg = get_config("llama3-8b").reduced(dtype="float32")
     model = get_model(cfg)
     params = model.init(jax.random.key(0))
+    cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+    cost.set_param_count(model.param_count())
     spool = Path(tempfile.mkdtemp(prefix="symphony_spool_"))
-    nodes = {i: RealNode(i, model, params, spool) for i in range(2)}
-    sched = SymphonyScheduler(2, POLICIES["symphony"])
+
+    sched = SymphonyScheduler(N_NODES, POLICIES["symphony"])
+    mgrs, backends, engines = {}, {}, {}
+    for i in range(N_NODES):
+        mgrs[i] = NodeManager(i, cfg, cost)
+        backends[i] = RealBackend(cfg, model, params, n_pages=64, page_size=8,
+                                  mgr=mgrs[i],
+                                  spool_dir=str(spool / f"node{i}"))
+        engines[i] = NodeEngine(i, cfg, cost, mgrs[i], max_batch=8,
+                                backend=backends[i])
+    for i, m in mgrs.items():
+        m.register_peers(mgrs)
+        sched.register_node_manager(i, m)
 
     rng = np.random.default_rng(1)
     sessions = {f"s{i}": [list(map(int, rng.integers(0, cfg.vocab, 10)))
-                          for _ in range(3)] for i in range(4)}
-    outputs = {}
-    for turn in range(3):
-        for sid, turns in sessions.items():
-            # advisory: scheduler plans placement; node manager migrates
-            meta = sched.session(sid)
-            target = sched.policy.place(sched, meta, True)
-            sched.planned[sid] = target
-            if meta.kv_node is not None and meta.kv_node != target:
-                nodes[target].fetch_from(nodes[meta.kv_node], sid)
-            nodes[target].promote(sid)
-            # the real request
+                          for _ in range(N_TURNS)] for i in range(N_SESSIONS)}
+    outputs = {sid: [] for sid in sessions}
+    now = 0.0
+    for turn in range(N_TURNS):
+        # advisories lead the requests: plan placement, migrate KV early
+        for sid in sessions:
+            sched.on_advisory(AdvisoryRequest(session_id=sid), now)
+        # requests arrive while others are queued, so load spreads nodes
+        batch = []
+        for sid, prompts in sessions.items():
             req = InferenceRequest(session_id=sid, prompt_tokens=10,
-                                   max_new_tokens=8)
-            node = sched.route(req, now=float(turn))
-            out = nodes[node].serve_turn(sid, turns[turn])
-            outputs.setdefault(sid, []).append(out)
-            sched.on_request_complete(req, meta.total_tokens + 18)
-            nodes[node].to_disk(sid)          # persistent-copy invariant
+                                   max_new_tokens=GEN,
+                                   prompt_ids=list(prompts[turn]),
+                                   arrival=now)
+            node = sched.route(req, now)
+            engines[node].submit(req)
+            batch.append((sid, node, req))
+        for i, eng in engines.items():
+            while eng.waiting or eng.running:
+                dt = eng.step(now)
+                now += dt
+                sched.report_step_latency(i, dt)
+        for sid, node, req in batch:
+            outputs[sid].append(req.output_ids)
+            sched.on_request_complete(req, backends[node].session_tokens(sid))
+            mgrs[node].background_flush(now)      # persistent-copy invariant
 
-    print("served", sum(len(v) for v in outputs.values()),
-          "turns across 2 real nodes with KV migration")
-    moves = {sid: sched.session(sid).kv_node for sid in sessions}
-    print("final KV placement:", moves)
+    served = sum(len(v) for v in outputs.values())
+    migrations = sum(b.stats["migrations_in"] for b in backends.values())
+    copied = sum(b.stats["copied_bytes"] for b in backends.values())
+    spooled = len(list(spool.glob("node*/*.npz")))
+    print(f"served {served} turns across {N_NODES} real nodes")
+    print(f"final KV placement: "
+          f"{ {sid: sched.session(sid).kv_node for sid in sessions} }")
+    print(f"real page traffic: {migrations} session migrations, "
+          f"{copied / 1024:.0f} KiB copied, {spooled} sessions spooled to disk")
 
-    # sanity: demonstrate the paged-attention kernel on one session's cache
+    # ---- verify one session token-for-token against dense recompute ------
     sid = "s0"
-    node = nodes[moves[sid]]
-    cache = node.hbm[sid]
-    # cache layout (B, Hkv, S, D) -> page pool (P, page, Hkv, D)
-    k = np.asarray(cache["k"][0]).transpose(0, 2, 1, 3)   # layer 0, (B,S,H,D)
-    v = np.asarray(cache["v"][0]).transpose(0, 2, 1, 3)
-    n = int(cache["len"][0])
-    npages = (n + PAGE - 1) // PAGE
-    kp = np.zeros((npages, PAGE, k.shape[2], k.shape[3]), k.dtype)
-    vp = np.zeros_like(kp)
-    kp.reshape(-1, *k.shape[2:])[:n] = k[0, :n]
-    vp.reshape(-1, *v.shape[2:])[:n] = v[0, :n]
-    q = jnp.asarray(np.asarray(
-        jax.random.normal(jax.random.key(2), (1, cfg.n_heads, cfg.d_head))),
-        jnp.float32)
-    out = paged_attention(q, jnp.asarray(kp, jnp.float32),
-                          jnp.asarray(vp, jnp.float32),
-                          jnp.arange(npages, dtype=jnp.int32)[None],
-                          jnp.asarray([n], jnp.int32))
-    print("paged-attention over the migrated cache:", out.shape,
-          "finite:", bool(jnp.isfinite(out).all()))
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    history, want = [], []
+    for t in range(N_TURNS):
+        history += sessions[sid][t]
+        logits, cache = prefill(params, jnp.asarray([history], jnp.int32))
+        cache = model.grow_cache(cache, GEN)
+        outs = []
+        for _ in range(GEN):
+            nxt = jnp.argmax(logits[:, :cfg.vocab], -1).astype(jnp.int32)
+            outs.append(int(nxt[0]))
+            logits, cache = decode(params, cache, nxt)
+        want.append(outs)
+        history += outs
+    assert outputs[sid] == want, (outputs[sid], want)
+    print(f"{sid} token stream matches the dense recompute reference "
+          f"across {N_TURNS} turns (incl. any cross-node migration)")
     shutil.rmtree(spool, ignore_errors=True)
 
 

@@ -34,6 +34,9 @@ class InferenceRequest:
     request_id: int = field(default_factory=lambda: next(_req_counter))
     # real-mode payload (None in simulation)
     prompt_ids: Optional[list] = None
+    # real-mode result: token ids generated for this request (RealBackend
+    # appends across preemption/resume; None in simulation)
+    output_ids: Optional[list] = None
     # --- filled by the runtime ---
     node_id: Optional[int] = None
     first_token_at: Optional[float] = None

@@ -164,6 +164,22 @@ class TieredKVStore:
             evicted.append((sid, l))
         return evicted
 
+    # -- invariant ---------------------------------------------------------------
+
+    def check(self) -> None:
+        """Byte-conservation invariant: per-tier accounting equals the sum
+        over entries (layer placements + persistent disk copies), and no
+        counter ever goes negative."""
+        for tier in TIER_ORDER:
+            expect = sum(e.bytes_per_layer for e in self.entries.values()
+                         for t in e.tier if t == tier)
+            if tier == DISK:
+                expect += sum(e.total_bytes for e in self.entries.values()
+                              if e.on_disk)
+            assert self.used[tier] == expect, \
+                f"{tier}: used={self.used[tier]} expected={expect}"
+            assert self.used[tier] >= 0, f"{tier}: negative accounting"
+
     # -- queries -----------------------------------------------------------------
 
     def hbm_resident_layers(self, session_id: str) -> int:

@@ -39,11 +39,17 @@ class NodeManager:
         self.fetches: Dict[str, FetchState] = {}
         self.pod_of = pod_of
         self.peers: Dict[int, "NodeManager"] = {}
+        # real-mode execution backend (serving/backend.py); when attached,
+        # every placement decision below also moves actual page contents
+        self.backend = None
         self.stats = dict(prefetches=0, migrations=0, migrated_bytes=0.0,
                           evictions=0, disk_writes=0)
 
     def register_peers(self, managers: Dict[int, "NodeManager"]) -> None:
         self.peers = managers
+
+    def attach_backend(self, backend) -> None:
+        self.backend = backend
 
     # -- channel helper ------------------------------------------------------------
 
@@ -66,6 +72,8 @@ class NodeManager:
             if peer is None or sid not in peer.store.entries:
                 return
             pe = peer.store.entries[sid]
+            if pe.pinned:
+                return               # peer is actively serving this session
             kind = "peer" if self.pod_of(kv_node) == self.pod_of(self.node_id) \
                 else "xpod"
             # migrate layer-by-layer into host (+ disk write-through)
@@ -77,6 +85,11 @@ class NodeManager:
             peer.fetches.pop(sid, None)
             self.store.admit(sid, pe.n_tokens, pe.bytes_per_layer,
                              pe.n_layers, tier=HOST, priority=pe.priority)
+            # real mode: actually move the page contents between nodes
+            if self.backend is not None and peer.backend is not None:
+                payload = peer.backend.export_session(sid)
+                if payload is not None:
+                    self.backend.import_session(sid, payload)
             self.fetches[sid] = FetchState(ready_at=ready)
             self.stats["migrations"] += 1
             self.stats["migrated_bytes"] += pe.total_bytes
@@ -100,11 +113,15 @@ class NodeManager:
             done = self._enqueue(chan, e.bytes_per_layer, kind, start)
             fs.ready_at[l] = done
             self.store.move_layer(sid, l, HBM)
+            if self.backend is not None:
+                self.backend.promote_layer(sid, l)
 
     def _disk_writethrough(self, sid: str, now: float) -> None:
         e = self.store.entries.get(sid)
         if e is None or e.on_disk:
             return
+        if self.backend is not None and not self.backend.persist(sid):
+            return        # nothing physically written: invariant not claimable
         self._enqueue("disk", e.total_bytes, "disk_w", now)
         self.store.ensure_persistent(sid)
         self.stats["disk_writes"] += 1
@@ -154,7 +171,9 @@ class NodeManager:
         # write-back is free when a persistent copy exists (the invariant);
         # otherwise the block demotes to host (no copy-out modeled: layer
         # KV writes stream through the background disk thread)
-        for sid, _l in evicted:
+        for sid, l in evicted:
+            if self.backend is not None:
+                self.backend.evict_layer(sid, l)
             self._disk_writethrough(sid, now)
         return self.store.free(HBM)
 
@@ -165,6 +184,8 @@ class NodeManager:
     def drop_session(self, sid: str) -> None:
         self.store.drop(sid)
         self.fetches.pop(sid, None)
+        if self.backend is not None:
+            self.backend.drop(sid)
 
     # -- fault tolerance -----------------------------------------------------------------
 

@@ -219,6 +219,123 @@ class DenseLM:
         logits = self._unembed(params, x[:, 0])
         return logits, dict(k=ks, v=vs, len=clen + 1)
 
+    # -- paged entry points (RealBackend serving path) ------------------------
+    #
+    # Same math as prefill()/decode_step(), but the KV lives in per-layer
+    # physical page pools (P, page, Hkv, D) addressed through block tables —
+    # the layout the SYMPHONY node manager migrates between tiers.  New-token
+    # KV is scattered into caller-supplied (page, slot) destinations *before*
+    # attention, and attention reads back through the pool, so any
+    # allocator/kernel disagreement shows up as a numerical mismatch.
+
+    def _block_paged(self, x, w, l, *, positions, k_pools, v_pools,
+                     write, attend):
+        """One layer: project qkv, rope, scatter new KV into layer ``l``'s
+        pools via ``write``, compute attention via ``attend``, then FFN.
+        Returns the updated residual stream."""
+        c = self.cfg
+        B, S, _ = x.shape
+        h = L.rms_norm(x, w["ln1"], c.norm_eps)
+        q = (h @ w["wq"]).reshape(B, S, c.n_heads, c.d_head)
+        k = (h @ w["wk"]).reshape(B, S, c.n_kv_heads, c.d_head)
+        v = (h @ w["wv"]).reshape(B, S, c.n_kv_heads, c.d_head)
+        if c.qk_norm:
+            q = L.rms_norm(q, w["qn"], c.norm_eps)
+            k = L.rms_norm(k, w["kn"], c.norm_eps)
+        q = L.apply_rope(q, positions, c.rope_theta)
+        k = L.apply_rope(k, positions, c.rope_theta)
+        k_pools[l], v_pools[l] = write(l, k, v)
+        o = attend(l, q)
+        x = x + o.reshape(B, S, -1) @ w["wo"]
+        h2 = L.rms_norm(x, w["ln2"], c.norm_eps)
+        return x + L.swiglu(h2, w["w1"], w["w3"], w["w2"])
+
+    def prefill_paged(self, params, token_ids, k_pools, v_pools, tables,
+                      slot_pages, slot_offs, n_cached: int,
+                      kernel_mode: str = "auto"):
+        """Continuation prefill of ONE sequence against paged KV.
+
+        token_ids: (Sq,) new tokens this turn (the engine prepends the
+          previous turn's pending generated token); their KV lands at
+          absolute positions [n_cached, n_cached + Sq).
+        k_pools/v_pools: length-L lists of (P, page, Hkv, D) pools.
+        tables[l]: (n_pages_l,) int32 block table covering the sequence's
+          n_cached + Sq tokens in layer l's pool.
+        slot_pages[l]/slot_offs[l]: (Sq,) physical destination of each new
+          token's KV in layer l.
+        Returns (last-position logits (V,), k_pools, v_pools).
+        """
+        from repro.kernels import ops
+        c = self.cfg
+        ids = jnp.asarray(token_ids, jnp.int32)[None]
+        x = self._embed(params, ids)
+        Sq = x.shape[1]
+        total = n_cached + Sq
+        positions = n_cached + jnp.arange(Sq)[None, :]
+        k_pools, v_pools = list(k_pools), list(v_pools)
+
+        def write(l, k, v):
+            dt = k_pools[l].dtype
+            kp = k_pools[l].at[slot_pages[l], slot_offs[l]].set(
+                k[0].astype(dt))
+            vp = v_pools[l].at[slot_pages[l], slot_offs[l]].set(
+                v[0].astype(dt))
+            return kp, vp
+
+        def attend(l, q):
+            Hkv, D = k_pools[l].shape[2], k_pools[l].shape[3]
+            # read the full context back THROUGH the pool (pages validate)
+            kd = k_pools[l][tables[l]].reshape(-1, Hkv, D)[:total][None]
+            vd = v_pools[l][tables[l]].reshape(-1, Hkv, D)[:total][None]
+            return ops.flash_prefill(q, kd, vd, q_offset=n_cached,
+                                     mode=kernel_mode, bq=Sq, bk=total)
+
+        for l in range(c.n_layers):
+            w = jax.tree.map(lambda a: a[l], params["blocks"])
+            x = self._block_paged(x, w, l, positions=positions,
+                                  k_pools=k_pools, v_pools=v_pools,
+                                  write=write, attend=attend)
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        return self._unembed(params, x[0, -1]), k_pools, v_pools
+
+    def decode_paged(self, params, tokens, k_pools, v_pools, tables,
+                     ctx_lens, slot_pages, slot_offs,
+                     kernel_mode: str = "auto"):
+        """One batched decode iteration over paged KV.
+
+        tokens: (B,) each sequence's pending token (KV not yet written).
+        tables[l]: (B, maxp_l) int32; ctx_lens: (B,) valid tokens INCLUDING
+        the pending token being written this step; slot_pages[l]/slot_offs[l]:
+        (B,) destination of the pending token's KV in layer l.
+        Returns (logits (B, V), k_pools, v_pools).
+        """
+        from repro.kernels import ops
+        c = self.cfg
+        x = self._embed(params, jnp.asarray(tokens, jnp.int32)[:, None])
+        positions = (ctx_lens - 1)[:, None]
+        k_pools, v_pools = list(k_pools), list(v_pools)
+
+        def write(l, k, v):
+            dt = k_pools[l].dtype
+            kp = k_pools[l].at[slot_pages[l], slot_offs[l]].set(
+                k[:, 0].astype(dt))
+            vp = v_pools[l].at[slot_pages[l], slot_offs[l]].set(
+                v[:, 0].astype(dt))
+            return kp, vp
+
+        def attend(l, q):
+            o = ops.paged_attention(q[:, 0], k_pools[l], v_pools[l],
+                                    tables[l], ctx_lens, mode=kernel_mode)
+            return o[:, None]
+
+        for l in range(c.n_layers):
+            w = jax.tree.map(lambda a: a[l], params["blocks"])
+            x = self._block_paged(x, w, l, positions=positions,
+                                  k_pools=k_pools, v_pools=v_pools,
+                                  write=write, attend=attend)
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        return self._unembed(params, x[:, 0]), k_pools, v_pools
+
     # -- dry-run specs --------------------------------------------------------
 
     def input_specs(self, cell: ShapeCell) -> Dict:

@@ -1,0 +1,505 @@
+"""Execution backends for the serving engine.
+
+One `Backend` protocol, two implementations, selected at engine
+construction — the engine's control flow (admission, continuation prefill,
+batched decode, cooperative purge, preemption) is identical in both modes:
+
+* `SimBackend` — every step charges CostModel seconds and no tensor moves.
+  This is the discrete-event simulator's backend and reproduces the paper's
+  cluster-scale numbers.
+* `RealBackend` — owns per-layer physical page pools ((P, page, Hkv, D)
+  jnp arrays standing in for HBM, plus a numpy host staging tier and an
+  optional .npz disk spool) and executes one engine iteration for real:
+  continuation prefill via the `flash_prefill` kernel writing new-token KV
+  into pages handed out by `PagedAllocator`, batched decode via the
+  `paged_attention` Pallas kernel over `batch_block_tables`/`ctx_lens`, and
+  preemption swap-out/swap-in that copies actual page contents between
+  tiers.  `TieredKVStore` (via the attached NodeManager) stays the single
+  source of truth for placement accounting; the backend mirrors it with
+  physical copies.
+
+Token-id semantics in real mode (the "pending token" invariant): the last
+generated token of a sequence never has KV written — it is fed as the next
+step's input.  Prefill therefore consumes [pending] + prompt_ids and emits
+one token; each decode consumes the pending token, writes its KV, and emits
+the next.  A resume-after-swap is just a prefill with an empty prompt.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.cost_model import CostModel
+from repro.serving.kv_cache import OutOfPages, PagedAllocator
+
+HBM, HOST = "hbm", "host"
+
+
+@dataclass
+class PrefillResult:
+    duration: float          # seconds this prefill occupied the node
+    stall: float = 0.0       # portion spent waiting on KV fetch/swap-in
+
+
+class Backend:
+    """Protocol: what one engine iteration needs from an execution backend."""
+
+    # -- capacity accounting (engine admission control) ---------------------
+    def session_kv_bytes(self, tokens: int) -> float:
+        raise NotImplementedError
+
+    def hbm_kv_budget(self) -> float:
+        raise NotImplementedError
+
+    def kv_in_use(self, running) -> float:
+        raise NotImplementedError
+
+    def resident_kv_bytes(self, sid: str) -> float:
+        """Fast-tier bytes this session already occupies (so admission does
+        not count them twice).  Sim sessions are tracked in the store, not
+        the engine — nothing to discount."""
+        return 0.0
+
+    # -- one engine iteration ----------------------------------------------
+    def prefill(self, req, cached: int, new_tokens: int,
+                now: float) -> PrefillResult:
+        raise NotImplementedError
+
+    def decode(self, running, now: float) -> float:
+        raise NotImplementedError
+
+    # -- preemption / lifecycle --------------------------------------------
+    def swap_out(self, sid: str, n_tokens: int) -> None:
+        pass
+
+    def drop(self, sid: str) -> None:
+        pass
+
+    def finish(self, req, now: float) -> None:
+        pass
+
+    # -- node-manager hooks (real page copies; sim: accounting only) --------
+    def evict_layer(self, sid: str, layer: int) -> None:
+        pass
+
+    def promote_layer(self, sid: str, layer: int) -> None:
+        pass
+
+    def persist(self, sid: str) -> bool:
+        """Write a complete copy to the slowest tier; returns whether a copy
+        now exists (sim: the modeled write always happens)."""
+        return True
+
+    def export_session(self, sid: str) -> Optional[dict]:
+        return None
+
+    def import_session(self, sid: str, payload: dict) -> None:
+        pass
+
+
+class SimBackend(Backend):
+    """CostModel-timed backend: the simulator's execution model, verbatim."""
+
+    def __init__(self, cost: CostModel, mgr):
+        self.cost = cost
+        self.mgr = mgr
+
+    def session_kv_bytes(self, tokens: int) -> float:
+        return self.cost.session_kv_bytes(tokens)
+
+    def hbm_kv_budget(self) -> float:
+        return self.cost.hbm_kv_budget()
+
+    def kv_in_use(self, running) -> float:
+        return sum(self.cost.session_kv_bytes(r.ctx_tokens) for r in running)
+
+    def prefill(self, req, cached, new_tokens, now):
+        # residual stall for cached KV not yet HBM-resident (layer-wise)
+        stall = 0.0
+        if cached > 0:
+            step_est = self.cost.prefill_time(req.prompt_tokens, cached)
+            stall = self.mgr.kv_stall(req.session_id, now, step_est)
+        return PrefillResult(stall + self.cost.prefill_time(new_tokens,
+                                                            cached), stall)
+
+    def decode(self, running, now):
+        total_ctx = sum(r.ctx_tokens for r in running)
+        return self.cost.decode_step_time(len(running), total_ctx)
+
+
+# ---------------------------------------------------------------------------
+# Real execution
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _SeqState:
+    n_kv: int = 0                       # tokens whose KV is written in pools
+    last_token: Optional[int] = None    # pending token (KV not yet written)
+    priority: int = 0
+
+
+class RealBackend(Backend):
+    """Real JAX execution over per-layer paged KV pools.
+
+    The "HBM" tier is a list of per-layer (P, page, Hkv, D) jnp pools; the
+    host tier is numpy arrays keyed (sid, layer); the optional disk tier is
+    an .npz spool directory.  One PagedAllocator per layer hands out pages —
+    allocators stay in lockstep except where the node manager evicted
+    individual layers (the paper's layer-granular placement).
+    """
+
+    def __init__(self, cfg, model, params, *, n_pages: int = 64,
+                 page_size: int = 8, kernel_mode: str = "auto",
+                 spool_dir: Optional[str] = None, mgr=None):
+        import jax.numpy as jnp
+        self.cfg = cfg
+        self.model = model
+        self.params = params
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.kernel_mode = kernel_mode
+        self.dtype = jnp.dtype(cfg.dtype)
+        L, Hkv, D = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+        shape = (n_pages, page_size, Hkv, D)
+        self.k_pools = [jnp.zeros(shape, self.dtype) for _ in range(L)]
+        self.v_pools = [jnp.zeros(shape, self.dtype) for _ in range(L)]
+        self.alloc: List[PagedAllocator] = [
+            PagedAllocator(n_pages, page_size) for _ in range(L)]
+        self.host: Dict[Tuple[str, int], dict] = {}   # (sid, layer) -> k/v np
+        self.seqs: Dict[str, _SeqState] = {}
+        self.spool = Path(spool_dir) if spool_dir else None
+        if self.spool:
+            self.spool.mkdir(parents=True, exist_ok=True)
+        self.mgr = None
+        if mgr is not None:
+            self.attach(mgr)
+        self.stats = dict(prefills=0, decode_steps=0, swaps_out=0,
+                          swaps_in=0, layer_evictions=0, layer_promotions=0,
+                          migrations_in=0, copied_bytes=0.0, disk_writes=0)
+        # per-generated-token (sid, logits) trail — parity tests compare it
+        # against the dense reference; negligible at serving-test scale
+        self.logit_trace: List[Tuple[str, np.ndarray]] = []
+
+    def attach(self, mgr) -> None:
+        """Bidirectional wiring: manager promote/evict trigger real copies."""
+        self.mgr = mgr
+        mgr.attach_backend(self)
+
+    # -- sizes --------------------------------------------------------------
+
+    @property
+    def _token_bytes(self) -> int:
+        c = self.cfg
+        return c.n_layers * 2 * c.n_kv_heads * c.d_head * self.dtype.itemsize
+
+    @property
+    def _layer_page_bytes(self) -> int:
+        c = self.cfg
+        return self.page_size * 2 * c.n_kv_heads * c.d_head \
+            * self.dtype.itemsize
+
+    def session_kv_bytes(self, tokens: int) -> float:
+        pages = self.alloc[0].pages_for(max(int(tokens), 0))
+        return pages * self.page_size * self._token_bytes
+
+    def hbm_kv_budget(self) -> float:
+        return self.n_pages * self.page_size * self._token_bytes
+
+    def kv_in_use(self, running) -> float:
+        used = max(a.used_pages for a in self.alloc)
+        return used * self.page_size * self._token_bytes
+
+    def resident_kv_bytes(self, sid: str) -> float:
+        # min across layers: never discount pages an evicted layer lacks
+        pages = min((len(a.seqs[sid].pages) if sid in a.seqs else 0)
+                    for a in self.alloc)
+        return pages * self.page_size * self._token_bytes
+
+    def session_tokens(self, sid: str) -> int:
+        """Sequence length incl. the pending token (what the next turn's
+        cached_tokens should be)."""
+        st = self.seqs.get(sid)
+        if st is None:
+            return 0
+        return st.n_kv + (1 if st.last_token is not None else 0)
+
+    # -- page plumbing ------------------------------------------------------
+
+    def _slots(self, layer: int, sid: str, start: int, n: int):
+        """(page_ids, offsets) for token positions [start, start+n)."""
+        pages = np.asarray(self.alloc[layer].seqs[sid].pages, np.int32)
+        pos = start + np.arange(n)
+        return pages[pos // self.page_size], \
+            np.asarray(pos % self.page_size, np.int32)
+
+    def _gather_np(self, layer: int, sid: str, n_tokens: int) -> dict:
+        """Copy one (sid, layer)'s KV out of the pools into host numpy."""
+        c = self.cfg
+        pages = np.asarray(self.alloc[layer].seqs[sid].pages, np.int32)
+        k = np.asarray(self.k_pools[layer][pages]).reshape(
+            -1, c.n_kv_heads, c.d_head)[:n_tokens].copy()
+        v = np.asarray(self.v_pools[layer][pages]).reshape(
+            -1, c.n_kv_heads, c.d_head)[:n_tokens].copy()
+        self.stats["copied_bytes"] += k.nbytes + v.nbytes
+        return dict(k=k, v=v, n_tokens=n_tokens)
+
+    def _scatter_from_np(self, layer: int, sid: str, payload: dict) -> None:
+        """allocate + copy a host-tier layer back into the pools."""
+        import jax.numpy as jnp
+        n = payload["n_tokens"]
+        self.alloc[layer].allocate(sid, n)
+        if n == 0:
+            return
+        pg, off = self._slots(layer, sid, 0, n)
+        self.k_pools[layer] = self.k_pools[layer].at[pg, off].set(
+            jnp.asarray(payload["k"], self.dtype))
+        self.v_pools[layer] = self.v_pools[layer].at[pg, off].set(
+            jnp.asarray(payload["v"], self.dtype))
+        self.stats["copied_bytes"] += payload["k"].nbytes \
+            + payload["v"].nbytes
+
+    def _extend_all(self, sid: str, n: int) -> None:
+        """Grow every layer's allocation by n tokens, all-or-nothing."""
+        if n <= 0:
+            return
+        for a in self.alloc:
+            s = a.seqs[sid]
+            need = a.pages_for(s.n_tokens + n) - len(s.pages)
+            if need > len(a.free_list):
+                raise OutOfPages(
+                    f"{sid}: need {need} pages, have {len(a.free_list)}")
+        for a in self.alloc:
+            a.extend(sid, n)
+
+    def _store_entry(self, sid: str):
+        if self.mgr is None:
+            return None
+        return self.mgr.store.entries.get(sid)
+
+    def _ensure_resident(self, sid: str) -> None:
+        """Swap in any host/disk-staged layers; allocate missing ones."""
+        for l in range(self.cfg.n_layers):
+            if sid in self.alloc[l].seqs:
+                continue
+            payload = self.host.get((sid, l))
+            if payload is None and self.spool:
+                f = self.spool / f"{sid}.npz"
+                if f.exists():
+                    z = np.load(f)
+                    payload = dict(k=z[f"k{l}"], v=z[f"v{l}"],
+                                   n_tokens=int(z["n_tokens"]))
+            if payload is None:
+                self.alloc[l].allocate(sid, 0)
+            else:
+                # scatter first (may raise OutOfPages), only then drop the
+                # host copy — a failed swap-in must not lose the KV
+                self._scatter_from_np(l, sid, payload)
+                self.host.pop((sid, l), None)
+                self.stats["swaps_in"] += 1
+            e = self._store_entry(sid)
+            if e is not None and l < e.n_layers and e.tier[l] != HBM:
+                self.mgr.store.move_layer(sid, l, HBM)
+
+    # -- engine iteration ---------------------------------------------------
+
+    def prefill(self, req, cached, new_tokens, now) -> PrefillResult:
+        import jax.numpy as jnp
+        t0 = time.perf_counter()
+        sid = req.session_id
+        if req.output_ids is None:
+            req.output_ids = []
+        st = self.seqs.get(sid)
+        if st is None:
+            st = self.seqs[sid] = _SeqState(priority=req.priority)
+            for a in self.alloc:
+                a.allocate(sid, 0)
+        self._ensure_resident(sid)
+        e = self._store_entry(sid)
+        if e is not None:
+            e.pinned = True          # serving: not migratable/evictable
+        t_resident = time.perf_counter()
+
+        ids = list(req.prompt_ids or [])
+        if st.last_token is not None:
+            ids = [st.last_token] + ids          # pending token leads the turn
+        if not ids:
+            raise ValueError(f"{sid}: prefill with no tokens to process")
+        n_cached = st.n_kv
+        self._extend_all(sid, len(ids))
+        tables, pg, off = [], [], []
+        for l in range(self.cfg.n_layers):
+            tables.append(jnp.asarray(self.alloc[l].block_table(sid),
+                                      jnp.int32))
+            p, o = self._slots(l, sid, n_cached, len(ids))
+            pg.append(p)
+            off.append(o)
+        logits, self.k_pools, self.v_pools = self.model.prefill_paged(
+            self.params, ids, self.k_pools, self.v_pools, tables, pg, off,
+            n_cached, kernel_mode=self.kernel_mode)
+        st.n_kv += len(ids)
+        lg = np.asarray(logits[:self.cfg.vocab])
+        self.logit_trace.append((sid, lg))
+        tok = int(np.argmax(lg))
+        st.last_token = tok
+        req.output_ids.append(tok)
+        self.stats["prefills"] += 1
+        t1 = time.perf_counter()
+        return PrefillResult(t1 - t0, stall=t_resident - t0)
+
+    def decode(self, running, now) -> float:
+        import jax.numpy as jnp
+        t0 = time.perf_counter()
+        sids = [r.req.session_id for r in running]
+        for sid in sids:
+            self._ensure_resident(sid)
+        # all-or-nothing growth across the batch: check before mutating
+        for a in self.alloc:
+            free = len(a.free_list)
+            need = sum(a.pages_for(a.seqs[s].n_tokens + 1)
+                       - len(a.seqs[s].pages) for s in sids)
+            if need > free:
+                raise OutOfPages(f"decode: need {need} pages, have {free}")
+        for sid in sids:
+            self._extend_all(sid, 1)
+        toks = [self.seqs[s].last_token for s in sids]
+        ctx = jnp.asarray(self.alloc[0].ctx_lens(sids))   # incl. pending
+        tables, pg, off = [], [], []
+        for l in range(self.cfg.n_layers):
+            tables.append(jnp.asarray(self.alloc[l].batch_block_tables(sids)))
+            p, o = zip(*(self._slots(l, s, self.seqs[s].n_kv, 1)
+                         for s in sids))
+            pg.append(np.concatenate(p))
+            off.append(np.concatenate(o))
+        logits, self.k_pools, self.v_pools = self.model.decode_paged(
+            self.params, toks, self.k_pools, self.v_pools, tables, ctx,
+            pg, off, kernel_mode=self.kernel_mode)
+        logits = np.asarray(logits[:, :self.cfg.vocab])
+        for i, sid in enumerate(sids):
+            st = self.seqs[sid]
+            st.n_kv += 1
+            self.logit_trace.append((sid, logits[i]))
+            tok = int(np.argmax(logits[i]))
+            st.last_token = tok
+            running[i].req.output_ids.append(tok)
+        self.stats["decode_steps"] += 1
+        return time.perf_counter() - t0
+
+    # -- preemption / lifecycle ---------------------------------------------
+
+    def swap_out(self, sid: str, n_tokens: int) -> None:
+        """Copy every resident layer to the host tier and free its pages."""
+        st = self.seqs.get(sid)
+        if st is None:
+            return
+        for l in range(self.cfg.n_layers):
+            a = self.alloc[l]
+            if sid not in a.seqs:
+                continue                      # layer already evicted to host
+            n = a.seqs[sid].n_tokens
+            self.host[(sid, l)] = self._gather_np(l, sid, n)
+            a.free(sid)
+        e = self._store_entry(sid)
+        if e is not None:
+            e.pinned = False         # preempted: fair game for migration
+            for l in range(e.n_layers):
+                if e.tier[l] == HBM:
+                    self.mgr.store.move_layer(sid, l, HOST)
+        self.stats["swaps_out"] += 1
+
+    def drop(self, sid: str) -> None:
+        for a in self.alloc:
+            a.free(sid)
+        for l in range(self.cfg.n_layers):
+            self.host.pop((sid, l), None)
+        self.seqs.pop(sid, None)
+        if self.spool:
+            f = self.spool / f"{sid}.npz"
+            if f.exists():
+                f.unlink()
+
+    def finish(self, req, now) -> None:
+        """Request completed: sync the store's view of the grown session."""
+        if self.mgr is None:
+            return
+        sid = req.session_id
+        bpl = len(self.alloc[0].seqs[sid].pages) * self._layer_page_bytes
+        self.mgr.mark_resident(sid, self.session_tokens(sid), bpl,
+                               priority=req.priority)
+        e = self._store_entry(sid)
+        if e is not None:
+            e.pinned = False         # idle again: migratable between turns
+
+    # -- node-manager hooks (cooperative purge / advisory prefetch) ---------
+
+    def evict_layer(self, sid: str, layer: int) -> None:
+        a = self.alloc[layer]
+        if sid not in a.seqs or sid not in self.seqs:
+            return
+        n = a.seqs[sid].n_tokens
+        if n > 0:
+            self.host[(sid, layer)] = self._gather_np(layer, sid, n)
+        a.free(sid)
+        self.stats["layer_evictions"] += 1
+
+    def promote_layer(self, sid: str, layer: int) -> None:
+        if sid in self.alloc[layer].seqs:
+            return
+        payload = self.host.get((sid, layer))
+        if payload is None:
+            return
+        self._scatter_from_np(layer, sid, payload)   # may raise: keep payload
+        self.host.pop((sid, layer), None)
+        self.stats["layer_promotions"] += 1
+
+    def persist(self, sid: str) -> bool:
+        """Disk write-through: one complete copy on the slowest tier.
+        Returns False (no persistent copy) when there is no spool or a
+        layer is unreachable — the store must not claim the invariant."""
+        if self.spool is None or sid not in self.seqs:
+            return False
+        arrs = dict(n_tokens=np.int64(0))
+        for l in range(self.cfg.n_layers):
+            if sid in self.alloc[l].seqs:
+                p = self._gather_np(l, sid, self.alloc[l].seqs[sid].n_tokens)
+            elif (sid, l) in self.host:
+                p = self.host[(sid, l)]
+            else:
+                return False
+            arrs[f"k{l}"] = p["k"]
+            arrs[f"v{l}"] = p["v"]
+            arrs["n_tokens"] = np.int64(p["n_tokens"])
+        np.savez(self.spool / f"{sid}.npz", **arrs)
+        self.stats["disk_writes"] += 1
+        return True
+
+    # -- peer migration (the advisory path, real copies) --------------------
+
+    def export_session(self, sid: str) -> Optional[dict]:
+        """Detach a session into host-format payload (for peer migration)."""
+        st = self.seqs.get(sid)
+        if st is None:
+            return None
+        self.swap_out(sid, st.n_kv)
+        layers = {l: self.host.pop((sid, l))
+                  for l in range(self.cfg.n_layers) if (sid, l) in self.host}
+        self.seqs.pop(sid)
+        if self.spool:
+            f = self.spool / f"{sid}.npz"
+            if f.exists():
+                f.unlink()
+        return dict(layers=layers, n_kv=st.n_kv, last_token=st.last_token,
+                    priority=st.priority)
+
+    def import_session(self, sid: str, payload: dict) -> None:
+        """Adopt a migrated session into the host tier (promotion follows
+        the node manager's priority plan)."""
+        self.seqs[sid] = _SeqState(n_kv=payload["n_kv"],
+                                   last_token=payload["last_token"],
+                                   priority=payload.get("priority", 0))
+        for l, p in payload["layers"].items():
+            self.host[(sid, l)] = p
+        self.stats["migrations_in"] += 1

@@ -1,11 +1,13 @@
 """Per-node continuous-batching engine (vLLM-style iteration scheduling)
 with SYMPHONY's cooperative memory management hooks.
 
-The engine is backend-agnostic: in simulation every step returns a duration
-from the CostModel; in real mode (examples/, tests/) the same control flow
-drives an actual JAX model via RealBackend.  One step() call is one engine
-iteration: admit prefills while there is HBM headroom, then run one decode
-iteration for the running batch.
+The engine is backend-agnostic by construction: all execution and capacity
+accounting go through one `Backend` object (serving/backend.py).  With the
+default `SimBackend` every step returns a duration from the CostModel; with
+a `RealBackend` the same control flow drives an actual JAX model — paged KV
+pools, the flash_prefill/paged_attention Pallas kernels, and real swap
+copies — and step durations are measured wall time.  There is no sim/real
+fork inside step(): one code path, two backends.
 
 Key behaviours under test:
   * continuation prefill — with KV reuse, prefill cost covers only the NEW
@@ -17,7 +19,7 @@ Key behaviours under test:
     drops it for recompute (vLLM-style);
   * stall accounting — a request whose KV layers are not yet HBM-resident
     pays the residual layer-wise-fetch stall (zero when the advisory led the
-    request by enough).
+    request by enough; in real mode, the measured swap-in copy time).
 """
 from __future__ import annotations
 
@@ -27,7 +29,9 @@ from typing import Deque, List, Optional
 
 from repro.core.advisory import InferenceRequest
 from repro.core.node_manager import NodeManager
+from repro.serving.backend import Backend, SimBackend
 from repro.serving.cost_model import CostModel
+from repro.serving.kv_cache import OutOfPages
 
 
 @dataclass
@@ -40,11 +44,14 @@ class Running:
 class NodeEngine:
     def __init__(self, node_id: int, cfg, cost: CostModel, mgr: NodeManager,
                  max_batch: int = 32, policy_reuses_kv: bool = True,
-                 swap_on_preempt: bool = True):
+                 swap_on_preempt: bool = True,
+                 backend: Optional[Backend] = None):
         self.node_id = node_id
         self.cfg = cfg
         self.cost = cost
         self.mgr = mgr
+        self.backend: Backend = backend if backend is not None \
+            else SimBackend(cost, mgr)
         self.max_batch = max_batch
         self.reuses_kv = policy_reuses_kv
         self.swap_on_preempt = swap_on_preempt
@@ -68,21 +75,27 @@ class NodeEngine:
         return len(self.waiting) + len(self.running)
 
     def kv_in_use(self) -> float:
-        return sum(self.cost.session_kv_bytes(r.ctx_tokens)
-                   for r in self.running)
+        return self.backend.kv_in_use(self.running)
 
     # -- one engine iteration -------------------------------------------------------
 
     def step(self, now: float) -> float:
-        """Run one iteration; returns its duration (sim seconds)."""
+        """Run one iteration; returns its duration (sim or wall seconds)."""
         dt = 0.0
         # 1) admit prefills while batch slots + memory allow
         while self.waiting and len(self.running) < self.max_batch:
             req = self.waiting[0]
             cached = req.cached_tokens if self.reuses_kv else 0
             total_ctx = req.cached_tokens + req.prompt_tokens + req.max_new_tokens
-            need = self.cost.session_kv_bytes(total_ctx)
-            budget = self.cost.hbm_kv_budget()
+            need = max(0.0, self.backend.session_kv_bytes(total_ctx)
+                       - self.backend.resident_kv_bytes(req.session_id))
+            budget = self.backend.hbm_kv_budget()
+            if need > budget:
+                # can never fit, even on an empty node: fail loudly instead
+                # of letting every driver's serve loop spin forever at dt=0
+                raise OutOfPages(
+                    f"{req.session_id}: request needs {need:.3g} KV bytes, "
+                    f"node budget is {budget:.3g}")
             if self.kv_in_use() + need > budget:
                 # cooperative: purge prefetched blocks (free — persistent copy)
                 protect = {r.req.session_id for r in self.running}
@@ -91,18 +104,18 @@ class NodeEngine:
                 if self.kv_in_use() + need > budget:
                     break                    # engine full: request waits
             self.waiting.popleft()
-            # residual stall for cached KV not yet HBM-resident (layer-wise)
-            stall = 0.0
-            if cached > 0:
-                step_est = self.cost.prefill_time(req.prompt_tokens, cached)
-                stall = self.mgr.kv_stall(req.session_id, now + dt, step_est)
             new_tokens = req.prompt_tokens + (0 if self.reuses_kv
                                               else req.cached_tokens)
+            try:
+                res = self.backend.prefill(req, cached, new_tokens, now + dt)
+            except OutOfPages:
+                self.waiting.appendleft(req)    # page-granular fragmentation
+                break
             self.stats["prefill_tokens"] += new_tokens
             if not self.reuses_kv and req.cached_tokens > 0:
                 self.stats["redundant_tokens"] += req.cached_tokens
-            dt += stall + self.cost.prefill_time(new_tokens, cached)
-            self.stats["stall_s"] += stall
+            dt += res.duration
+            self.stats["stall_s"] += res.stall
             if req.first_token_at is None:
                 req.first_token_at = now + dt
             req.generated = 1
@@ -111,9 +124,8 @@ class NodeEngine:
                 req.max_new_tokens - 1))
 
         # 2) one decode iteration for the whole batch
-        if self.running:
-            total_ctx = sum(r.ctx_tokens for r in self.running)
-            d = self.cost.decode_step_time(len(self.running), total_ctx)
+        d = self._decode_with_pressure(now + dt) if self.running else None
+        if d is not None:
             dt += d
             self.stats["decode_steps"] += 1
             finished = []
@@ -127,8 +139,28 @@ class NodeEngine:
             for r in finished:
                 self.running.remove(r)
                 self.completed.append(r.req)
+                self.backend.finish(r.req, now + dt)
         self.stats["busy_s"] += dt
         return dt
+
+    def _decode_with_pressure(self, now: float) -> Optional[float]:
+        """One backend decode; on page exhaustion (real mode), first ask the
+        node manager for a cooperative purge, then swap out victims."""
+        purged = False
+        while self.running:
+            try:
+                return self.backend.decode(self.running, now)
+            except OutOfPages:
+                if not purged:
+                    purged = True
+                    protect = {r.req.session_id for r in self.running}
+                    self.mgr.on_memory_pressure(
+                        len(self.running) * self.backend.session_kv_bytes(1),
+                        now, protect)
+                    continue
+                if self.preempt_one(now) is None:
+                    raise
+        return None
 
     # -- preemption (memory pressure mid-decode) ----------------------------------------
 
@@ -142,8 +174,15 @@ class NodeEngine:
         req = victim.req
         if self.swap_on_preempt:
             req.cached_tokens = victim.ctx_tokens     # swap out: KV kept
+            req.prompt_ids = None       # already consumed into the swapped KV
+            self.backend.swap_out(req.session_id, victim.ctx_tokens)
         else:
             req.cached_tokens = 0                     # drop: full recompute
+            # real mode: the engine does not hold the session's full token
+            # history, so recompute needs the driver to resubmit it; stale
+            # prompt_ids would silently serve a truncated context instead
+            req.prompt_ids = None
+            self.backend.drop(req.session_id)
         req.prompt_tokens = 0 if self.swap_on_preempt else victim.ctx_tokens
         req.max_new_tokens = victim.remaining
         self.waiting.appendleft(req)

@@ -60,7 +60,11 @@ class PagedAllocator:
     def allocate(self, seq_id: str, n_tokens: int) -> SeqAlloc:
         assert seq_id not in self.seqs
         self.seqs[seq_id] = SeqAlloc(seq_id)
-        return self.extend(seq_id, n_tokens)
+        try:
+            return self.extend(seq_id, n_tokens)
+        except OutOfPages:
+            del self.seqs[seq_id]     # failed admission must not poison sid
+            raise
 
     def extend(self, seq_id: str, new_tokens: int) -> SeqAlloc:
         s = self.seqs[seq_id]

@@ -1,0 +1,132 @@
+"""Minimal, API-compatible stand-in for the `hypothesis` package.
+
+Installed by the root conftest.py ONLY when the real package is missing
+(minimal CPU containers).  It covers exactly the surface this repo's tests
+use — @given/@settings over the strategies below — and replaces guided
+search with a fixed-seed random sample, so runs are deterministic and the
+property tests keep their value as randomized regression tests.  With real
+hypothesis installed (requirements-dev.txt), this file is inert.
+"""
+from __future__ import annotations
+
+
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied
+
+
+class Strategy:
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value=0, max_value=(1 << 30)):
+        self.lo, self.hi = min_value, max_value
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Booleans(Strategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value=0.0, max_value=1.0, **_kw):
+        self.lo, self.hi = min_value, max_value
+
+    def example(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Tuples(Strategy):
+    def __init__(self, *parts):
+        self.parts = parts
+
+    def example(self, rng):
+        return tuple(p.example(rng) for p in self.parts)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements, min_size=0, max_size=10, **_kw):
+        self.elements = elements
+        self.min_size, self.max_size = min_size, max_size
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(n)]
+
+
+def given(*arg_strats, **kw_strats):
+    def decorate(fn):
+        # no functools.wraps: __wrapped__ would expose the drawn-parameter
+        # signature to pytest, which would then demand fixtures for them
+        def wrapper(*outer_args, **outer_kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"stub:{fn.__module__}.{fn.__qualname__}")
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < n * 20:
+                attempts += 1
+                args = [s.example(rng) for s in arg_strats]
+                kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*outer_args, *args, **outer_kwargs, **kwargs)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return decorate
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install():
+    """Register stub modules as `hypothesis` / `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _Integers
+    st.sampled_from = _SampledFrom
+    st.booleans = _Booleans
+    st.floats = _Floats
+    st.tuples = _Tuples
+    st.lists = _Lists
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,144 @@
+"""Hypothesis op-sequence state machines over the two bookkeeping layers the
+RealBackend trusts: `PagedAllocator` (physical pages) and `TieredKVStore`
+(tier placement bytes).  Every generated op sequence must keep the class
+invariants (`check()`) true after EVERY op — these are the ledgers that real
+page copies follow, so a bookkeeping drift here is silent KV corruption
+there."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memory import DISK, HBM, HOST, TieredKVStore
+from repro.serving.kv_cache import OutOfPages, PagedAllocator
+
+# ---------------------------------------------------------------------------
+# PagedAllocator: alloc / extend / truncate / free
+# ---------------------------------------------------------------------------
+
+ALLOC_OP = st.tuples(
+    st.sampled_from(["alloc", "extend", "truncate", "free", "tables"]),
+    st.integers(0, 5),           # session index
+    st.integers(0, 30),          # token count argument
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(ALLOC_OP, min_size=1, max_size=80))
+def test_allocator_state_machine(ops):
+    a = PagedAllocator(n_pages=24, page_size=4)
+    model = {}                                    # sid -> expected n_tokens
+    for op, sid_i, tok in ops:
+        sid = f"s{sid_i}"
+        try:
+            if op == "alloc" and sid not in a.seqs:
+                a.allocate(sid, tok)
+                model[sid] = tok
+            elif op == "extend" and sid in a.seqs:
+                a.extend(sid, tok)
+                model[sid] += tok
+            elif op == "truncate" and sid in a.seqs:
+                a.truncate(sid, tok)
+                model[sid] = min(model[sid], tok)
+            elif op == "free":
+                a.free(sid)
+                model.pop(sid, None)
+            elif op == "tables" and a.seqs:
+                sids = sorted(a.seqs)
+                tbl = a.batch_block_tables(sids)
+                assert tbl.shape[0] == len(sids)
+                assert (a.ctx_lens(sids) ==
+                        [a.seqs[s].n_tokens for s in sids]).all()
+        except OutOfPages:
+            # failed op must not have mutated anything
+            pass
+        a.check()
+        assert a.used_pages == sum(len(s.pages) for s in a.seqs.values())
+        for sid2, n in model.items():
+            s = a.seqs[sid2]
+            assert s.n_tokens == n
+            # enough pages to hold the tokens, never more than one spare
+            assert len(s.pages) >= a.pages_for(n)
+            assert len(s.pages) <= max(a.pages_for(n), a.pages_for(n))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16), st.integers(0, 200))
+def test_allocator_block_table_addresses_every_token(n_pages, page, toks):
+    a = PagedAllocator(n_pages=n_pages, page_size=page)
+    if a.pages_for(toks) > n_pages:
+        with pytest.raises(OutOfPages):
+            a.allocate("s", toks)
+        return
+    a.allocate("s", toks)
+    tbl = a.block_table("s")
+    # every token position maps to a distinct (page, slot) inside the pool
+    pos = np.arange(toks)
+    pages = tbl[pos // page]
+    assert (pages >= 0).all() and (pages < n_pages).all()
+    flat = pages * page + pos % page
+    assert len(set(flat.tolist())) == toks
+
+
+# ---------------------------------------------------------------------------
+# TieredKVStore: admit / grow / move / evict / persist / drop
+# ---------------------------------------------------------------------------
+
+STORE_OP = st.tuples(
+    st.sampled_from(["admit", "grow", "move", "evict", "persist", "drop",
+                     "promote"]),
+    st.integers(0, 5),           # session index
+    st.integers(1, 40),          # bytes-per-layer / bytes-needed argument
+    st.integers(1, 6),           # layer count / layer index argument
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(STORE_OP, min_size=1, max_size=80))
+def test_tiered_store_state_machine(ops):
+    s = TieredKVStore(hbm_budget=300, host_budget=100000)
+    for op, sid_i, nbytes, nl in ops:
+        sid = f"s{sid_i}"
+        e = s.entries.get(sid)
+        if op == "admit" and e is None:
+            tier = (HBM, HOST, DISK)[sid_i % 3]
+            s.admit(sid, n_tokens=nbytes, bytes_per_layer=nbytes,
+                    n_layers=nl, tier=tier, on_disk=sid_i % 2 == 0)
+        elif op == "grow" and e is not None:
+            s.grow(sid, new_tokens=nl, new_bytes_per_layer=nbytes)
+        elif op == "move" and e is not None:
+            s.move_layer(sid, nl % e.n_layers, (HBM, HOST, DISK)[nbytes % 3])
+        elif op == "evict":
+            s.evict_hbm_to_fit(nbytes * 10)
+        elif op == "persist" and e is not None:
+            s.ensure_persistent(sid)
+        elif op == "drop":
+            s.drop(sid)
+        elif op == "promote" and e is not None:
+            for l, _src in s.promotion_plan(sid, max_bytes=nbytes * 5):
+                s.move_layer(sid, l, HBM)
+        s.check()
+        # persistent copies are whole-session: on_disk implies disk bytes
+        disk_persist = sum(e2.total_bytes for e2 in s.entries.values()
+                           if e2.on_disk)
+        assert s.used[DISK] >= disk_persist
+
+
+def test_evict_respects_pins_and_protection():
+    s = TieredKVStore(hbm_budget=1000, host_budget=10000)
+    s.admit("pinned", 10, 10, 4, tier=HBM)
+    s.entries["pinned"].pinned = True
+    s.admit("prot", 10, 10, 4, tier=HBM)
+    s.admit("victim", 10, 10, 4, tier=HBM)
+    s.evict_hbm_to_fit(10_000, protect={"prot"})
+    s.check()
+    assert s.hbm_resident_layers("pinned") == 4
+    assert s.hbm_resident_layers("prot") == 4
+    assert s.hbm_resident_layers("victim") == 0
+
+
+def test_store_check_catches_corruption():
+    s = TieredKVStore(hbm_budget=100, host_budget=100)
+    s.admit("a", 5, 10, 2, tier=HBM)
+    s.used[HBM] -= 3                      # corrupt the ledger on purpose
+    with pytest.raises(AssertionError):
+        s.check()
