@@ -14,7 +14,7 @@ from pathlib import Path
 
 from repro.configs import get_config
 from repro.serving.cost_model import HardwareSpec
-from repro.serving.simulator import ClusterSim
+from repro.serving.simulator import ClusterRuntime
 from repro.traces.sharegpt import ShareGPTTrace
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
@@ -25,8 +25,8 @@ def run_policy(arch: str, policy: str, *, n_nodes=8, users=256, sessions=None,
                seed=0, miss=0.0, prefill_heavy=False, priority_frac=0.0,
                hw=PAPER_HW, max_batch=32, advisory_to_hbm=True):
     cfg = get_config(arch)
-    sim = ClusterSim(cfg, n_nodes=n_nodes, policy=policy, hw=hw,
-                     max_batch=max_batch, advisory_to_hbm=advisory_to_hbm)
+    sim = ClusterRuntime(cfg, n_nodes=n_nodes, policy=policy, hw=hw,
+                         max_batch=max_batch, advisory_to_hbm=advisory_to_hbm)
     trace = ShareGPTTrace(n_users=users,
                           n_sessions=sessions or max(users * 2, 200),
                           seed=seed, advisory_miss_rate=miss,

@@ -1,13 +1,15 @@
 """Paper Figures 12/13 (normalized latency, TTFT, req/s vs concurrent
 users), Figure 14 (load imbalance), Figure 16 (prefill-heavy), Figure 17
-(missing advisories), Figure 18 (prioritization), Figure 15 (agents)."""
+(missing advisories), Figure 18 (prioritization), Figure 15 (agents) —
+all driven through `ClusterRuntime` in sim mode — plus the
+``BENCH_cluster.json`` trajectory artifact (``--cluster``)."""
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import PAPER_HW, emit, run_policy, save
 from repro.configs import get_config
-from repro.serving.simulator import ClusterSim
+from repro.serving.simulator import ClusterRuntime
 from repro.traces.agents import MetaGPTTrace
 
 POLICIES = ("symphony", "sticky", "stateless")
@@ -102,7 +104,7 @@ def fig15(arch: str = "llama3-8b", n_projects=24):
     out = {}
     for pol, adv in (("symphony", True), ("stateless", False)):
         cfg = get_config(arch)
-        sim = ClusterSim(cfg, n_nodes=8, policy=pol, hw=PAPER_HW)
+        sim = ClusterRuntime(cfg, n_nodes=8, policy=pol, hw=PAPER_HW)
         tr = MetaGPTTrace(n_projects=n_projects, seed=7, advisory=adv)
         t0 = time.time()
         r = sim.run(tr)
@@ -115,3 +117,34 @@ def fig15(arch: str = "llama3-8b", n_projects=24):
         out["symphony"]["makespan_s"], 1e-9)
     save("fig15_agents", out)
     return out
+
+
+def bench_cluster(arch: str = "llama3-8b", users: int = 128):
+    """Trajectory-tracking artifact: the cluster-level metrics surface
+    (throughput / TTFT / TPOT / imbalance + per-node migration & recovery
+    stats) for every policy on one seeded sim-mode workload, written to
+    ``results/bench/BENCH_cluster.json`` so CI can diff it run-over-run."""
+    out = {}
+    for pol in POLICIES:
+        r = run_policy(arch, pol, users=users, sessions=users * 2, seed=11)
+        m = r.metrics()
+        m["wall_s"] = r.stats["wall_s"]
+        out[pol] = m
+        emit(f"cluster.{pol}.req_per_s", m["throughput_rps"] * 1e6,
+             f"ttft={m['ttft_mean_s']*1e3:.1f}ms "
+             f"tpot={m['tpot_mean_s']*1e3:.2f}ms "
+             f"imb={m['imbalance']['ratio']:.2f}")
+    save("BENCH_cluster", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cluster", action="store_true",
+                    help="emit the BENCH_cluster.json trajectory artifact")
+    ap.add_argument("--users", type=int, default=128)
+    args = ap.parse_args()
+    if args.cluster:
+        bench_cluster(users=args.users)

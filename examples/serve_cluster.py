@@ -1,125 +1,93 @@
-"""End-to-end driver: a REAL 2-node SYMPHONY cluster on CPU serving batched
-multi-turn sessions with an actual tiny model — real tokens, real paged KV
-migrating through the tiered store (HBM = jnp page pools, host = numpy
-staging, disk = .npz spool), flash_prefill on the continuation path and the
-paged_attention Pallas kernel (interpret mode) on the decode path.
+"""End-to-end driver: the full multi-node SYMPHONY scenario on the REAL
+backend, through the same `ClusterRuntime` event loop that runs the
+paper-scale simulations.
+
+A 3-node cluster on CPU serves interleaved multi-turn sessions with an
+actual tiny model — real tokens, real paged KV migrating through the tiered
+store (HBM = jnp page pools, host = numpy staging, disk = per-node .npz
+spools), flash_prefill on the continuation path and the paged_attention
+Pallas kernel (interpret mode) on the decode path.
 
 Each turn: an advisory fires first, the scheduler plans placement, and the
 target node's manager migrates + promotes the session KV *off the critical
-path* — `NodeManager` placement decisions trigger physical page copies
-through the attached `RealBackend` (export/import between nodes, host<->HBM
-promotion, disk write-through).  The inference request then routes to the
-prepared node and the engine serves it with continuation prefill.
+path* (real export/import page copies between nodes).  The scenario shape
+(2 sessions, 3 nodes) guarantees both headline events deterministically:
 
-Self-verifying: one session's full token stream is checked against a dense
-full-recompute reference at the end.
+* turn 1 occupies nodes 0 and 1, so node 2 is idle — the first turn-2
+  advisory always plans it (strictly smallest load key) and its session's
+  KV migrates across nodes for real;
+* after session s0's turn 2 completes, the node that served it is killed:
+  its fast tiers are physically lost, stranded requests are replayed from
+  turn start, and orphaned KV is recovered from the dead node's disk spool
+  (or recomputed from full history when no spool copy exists).
+
+Self-verifying: every session's token stream must match the dense
+full-recompute reference exactly, across migration AND the failure.
 
 Run:  python examples/serve_cluster.py
 """
-import shutil
 import sys
-import tempfile
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.core.advisory import AdvisoryRequest, InferenceRequest
-from repro.core.node_manager import NodeManager
-from repro.core.policies import POLICIES
-from repro.core.scheduler import SymphonyScheduler
 from repro.models.registry import get_model
-from repro.serving.backend import RealBackend
-from repro.serving.cost_model import CostModel, HardwareSpec
-from repro.serving.engine import NodeEngine
+from repro.serving.cost_model import HardwareSpec
+from repro.serving.scenario import (MultiTurnRealTrace, dense_reference,
+                                    session_outputs)
+from repro.serving.simulator import ClusterRuntime
 
-N_NODES, N_SESSIONS, N_TURNS, GEN = 2, 4, 3, 8
+N_NODES, N_SESSIONS, N_TURNS, GEN = 3, 2, 4, 8
 
 
 def main():
     cfg = get_config("llama3-8b").reduced(dtype="float32")
     model = get_model(cfg)
     params = model.init(jax.random.key(0))
-    cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
-    cost.set_param_count(model.param_count())
-    spool = Path(tempfile.mkdtemp(prefix="symphony_spool_"))
 
-    sched = SymphonyScheduler(N_NODES, POLICIES["symphony"])
-    mgrs, backends, engines = {}, {}, {}
-    for i in range(N_NODES):
-        mgrs[i] = NodeManager(i, cfg, cost)
-        backends[i] = RealBackend(cfg, model, params, n_pages=64, page_size=8,
-                                  mgr=mgrs[i],
-                                  spool_dir=str(spool / f"node{i}"))
-        engines[i] = NodeEngine(i, cfg, cost, mgrs[i], max_batch=8,
-                                backend=backends[i])
-    for i, m in mgrs.items():
-        m.register_peers(mgrs)
-        sched.register_node_manager(i, m)
+    rt = ClusterRuntime(cfg, n_nodes=N_NODES, policy="symphony",
+                        hw=HardwareSpec(chips_per_replica=1),
+                        max_batch=8, mode="real", model=model,
+                        params=params, n_pages=64, page_size=8)
+    trace = MultiTurnRealTrace(cfg, n_sessions=N_SESSIONS, n_turns=N_TURNS,
+                               prompt_len=10, gen=GEN, seed=1,
+                               fail_after_turn=2)
+    try:
+        _run_and_verify(rt, trace, cfg, model, params)
+    finally:
+        rt.cleanup()       # drop the spool even when verification fails
 
-    rng = np.random.default_rng(1)
-    sessions = {f"s{i}": [list(map(int, rng.integers(0, cfg.vocab, 10)))
-                          for _ in range(N_TURNS)] for i in range(N_SESSIONS)}
-    outputs = {sid: [] for sid in sessions}
-    now = 0.0
-    for turn in range(N_TURNS):
-        # advisories lead the requests: plan placement, migrate KV early
-        for sid in sessions:
-            sched.on_advisory(AdvisoryRequest(session_id=sid), now)
-        # requests arrive while others are queued, so load spreads nodes
-        batch = []
-        for sid, prompts in sessions.items():
-            req = InferenceRequest(session_id=sid, prompt_tokens=10,
-                                   max_new_tokens=GEN,
-                                   prompt_ids=list(prompts[turn]),
-                                   arrival=now)
-            node = sched.route(req, now)
-            engines[node].submit(req)
-            batch.append((sid, node, req))
-        for i, eng in engines.items():
-            while eng.waiting or eng.running:
-                dt = eng.step(now)
-                now += dt
-                sched.report_step_latency(i, dt)
-        for sid, node, req in batch:
-            outputs[sid].append(req.output_ids)
-            sched.on_request_complete(req, backends[node].session_tokens(sid))
-            mgrs[node].background_flush(now)      # persistent-copy invariant
 
-    served = sum(len(v) for v in outputs.values())
-    migrations = sum(b.stats["migrations_in"] for b in backends.values())
-    copied = sum(b.stats["copied_bytes"] for b in backends.values())
-    spooled = len(list(spool.glob("node*/*.npz")))
-    print(f"served {served} turns across {N_NODES} real nodes")
-    print(f"final KV placement: "
-          f"{ {sid: sched.session(sid).kv_node for sid in sessions} }")
+def _run_and_verify(rt, trace, cfg, model, params):
+    res = rt.run(trace)
+    m = res.metrics()
+
+    migrations = sum(n["migrations"] for n in m["per_node"].values())
+    recoveries = sum(n["recoveries"] for n in m["per_node"].values())
+    copied = sum(n.get("copied_bytes", 0) for n in m["per_node"].values())
+    dead = sorted(i for i, st in rt.sched.nodes.items() if not st.alive)
+    print(f"served {m['completed']} turns across {N_NODES} real nodes "
+          f"(node {dead} failed mid-run)")
     print(f"real page traffic: {migrations} session migrations, "
-          f"{copied / 1024:.0f} KiB copied, {spooled} sessions spooled to disk")
+          f"{recoveries} spool recoveries, {copied / 1024:.0f} KiB copied")
+    print(f"ttft mean {m['ttft_mean_s']*1e3:.0f} ms   "
+          f"tpot mean {m['tpot_mean_s']*1e3:.0f} ms   "
+          f"imbalance ratio {m['imbalance']['ratio']:.2f}")
 
-    # ---- verify one session token-for-token against dense recompute ------
-    sid = "s0"
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step)
-    history, want = [], []
-    for t in range(N_TURNS):
-        history += sessions[sid][t]
-        logits, cache = prefill(params, jnp.asarray([history], jnp.int32))
-        cache = model.grow_cache(cache, GEN)
-        outs = []
-        for _ in range(GEN):
-            nxt = jnp.argmax(logits[:, :cfg.vocab], -1).astype(jnp.int32)
-            outs.append(int(nxt[0]))
-            logits, cache = decode(params, cache, nxt)
-        want.append(outs)
-        history += outs
-    assert outputs[sid] == want, (outputs[sid], want)
-    print(f"{sid} token stream matches the dense recompute reference "
-          f"across {N_TURNS} turns (incl. any cross-node migration)")
-    shutil.rmtree(spool, ignore_errors=True)
+    # ---- verify EVERY session token-for-token against dense recompute ----
+    got = session_outputs(res)
+    want = dense_reference(cfg, model, params, trace.prompts, GEN)
+    assert got == want, (got, want)
+    assert migrations >= 1, "expected at least one advisory-driven migration"
+    assert dead, "expected the injected node failure to have happened"
+    for mgr in rt.managers.values():
+        mgr.store.check()
+    print(f"all {N_SESSIONS} sessions match the dense recompute reference "
+          f"across {N_TURNS} turns (incl. cross-node migration + failure "
+          f"recovery: {recoveries} from spool)")
 
 
 if __name__ == "__main__":

@@ -176,9 +176,9 @@ class TieredKVStore:
             if tier == DISK:
                 expect += sum(e.total_bytes for e in self.entries.values()
                               if e.on_disk)
+            assert self.used[tier] >= 0, f"{tier}: negative accounting"
             assert self.used[tier] == expect, \
                 f"{tier}: used={self.used[tier]} expected={expect}"
-            assert self.used[tier] >= 0, f"{tier}: negative accounting"
 
     # -- queries -----------------------------------------------------------------
 

@@ -15,6 +15,7 @@ from typing import Dict, Optional
 from repro.core.advisory import AdvisoryRequest
 from repro.core.memory import DISK, HBM, HOST, TieredKVStore
 from repro.serving.cost_model import CostModel
+from repro.serving.kv_cache import OutOfPages
 
 
 @dataclass
@@ -43,7 +44,7 @@ class NodeManager:
         # every placement decision below also moves actual page contents
         self.backend = None
         self.stats = dict(prefetches=0, migrations=0, migrated_bytes=0.0,
-                          evictions=0, disk_writes=0)
+                          evictions=0, disk_writes=0, recoveries=0)
 
     def register_peers(self, managers: Dict[int, "NodeManager"]) -> None:
         self.peers = managers
@@ -100,21 +101,30 @@ class NodeManager:
         self.stats["prefetches"] += 1
 
     def promote(self, sid: str, now: float) -> None:
-        """Greedy cooperative promotion: lower layers first into free HBM."""
+        """Greedy cooperative promotion: lower layers first into free HBM.
+
+        Best-effort by contract: the physical page copy happens BEFORE the
+        accounting move, so a backend that runs out of physical pages
+        (fragmentation the byte-level store cannot see) stops the plan with
+        the remaining layers left in the slow tier — the advisory path never
+        raises and store accounting never diverges from placement."""
         e = self.store.entries.get(sid)
         if e is None:
             return
         fs = self.fetches.setdefault(
             sid, FetchState(ready_at=[now] * e.n_layers))
         for l, src in self.store.promotion_plan(sid):
+            if self.backend is not None:
+                try:
+                    self.backend.promote_layer(sid, l)
+                except OutOfPages:
+                    break            # HBM physically full: stay in slow tier
             kind = "h2d" if src in (HOST,) else "disk_r"
             chan = "h2d" if src == HOST else "disk"
             start = max(now, fs.ready_at[l] if l < len(fs.ready_at) else now)
             done = self._enqueue(chan, e.bytes_per_layer, kind, start)
             fs.ready_at[l] = done
             self.store.move_layer(sid, l, HBM)
-            if self.backend is not None:
-                self.backend.promote_layer(sid, l)
 
     def _disk_writethrough(self, sid: str, now: float) -> None:
         e = self.store.entries.get(sid)
@@ -177,6 +187,10 @@ class NodeManager:
             self._disk_writethrough(sid, now)
         return self.store.free(HBM)
 
+    def flush_session(self, sid: str, now: float) -> None:
+        """Write-through one session's (possibly regrown) KV to disk."""
+        self._disk_writethrough(sid, now)
+
     def background_flush(self, now: float) -> None:
         for sid in list(self.store.entries):
             self._disk_writethrough(sid, now)
@@ -189,6 +203,43 @@ class NodeManager:
 
     # -- fault tolerance -----------------------------------------------------------------
 
+    def recover_from_spool(self, sid: str, dead: "NodeManager",
+                           now: float) -> bool:
+        """Failure recovery: pull a session's persistent copy out of a
+        crashed peer's disk spool into this node's host tier (the paper's
+        always-one-copy-on-disk invariant is the recovery substrate).
+
+        Physical first, accounting second: in real mode the payload is read
+        from the dead node's spool before either store is touched, so a
+        missing/corrupt spool file leaves both nodes' accounting intact and
+        the caller falls back to full recompute."""
+        if sid in self.store.entries:
+            return True                       # already recovered here
+        e = dead.store.entries.get(sid)
+        if e is None or not e.on_disk:
+            return False
+        payload = None
+        if self.backend is not None:
+            if dead.backend is None:
+                return False
+            payload = dead.backend.recover_session(sid)
+            if payload is None:
+                return False     # no physical copy: recovery not claimable
+        ready = []
+        for l in range(e.n_layers):
+            done = self._enqueue("disk", e.bytes_per_layer, "disk_r", now)
+            ready.append(done)
+        dead.store.drop(sid)
+        dead.fetches.pop(sid, None)
+        self.store.admit(sid, e.n_tokens, e.bytes_per_layer, e.n_layers,
+                         tier=HOST, priority=e.priority)
+        self.fetches[sid] = FetchState(ready_at=ready)
+        if payload is not None:
+            self.backend.import_session(sid, payload)
+        self._disk_writethrough(sid, now)     # re-establish the invariant
+        self.stats["recoveries"] += 1
+        return True
+
     def crash(self) -> None:
         """Lose HBM/host tiers; the disk spool survives (recovery path)."""
         for sid in list(self.store.entries):
@@ -198,5 +249,6 @@ class NodeManager:
             else:
                 for l in range(e.n_layers):
                     self.store.move_layer(sid, l, DISK)
+                e.pinned = False     # whoever was serving it is gone
         self.chan = {k: 0.0 for k in self.chan}
         self.fetches.clear()

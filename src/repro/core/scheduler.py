@@ -17,7 +17,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from repro.core.advisory import AdvisoryRequest, InferenceRequest, SessionMeta
+from repro.core.advisory import InferenceRequest, SessionMeta
 from repro.core.policies import Policy
 
 
@@ -25,12 +25,16 @@ from repro.core.policies import Policy
 class NodeStats:
     node_id: int
     outstanding: int = 0           # queued + running requests
+    planned: int = 0               # advisory-planned arrivals not yet routed
     sessions: int = 0              # sessions whose KV lives here
     ewma_step: float = 0.0         # straggler signal (s per decode step)
     alive: bool = True
 
     def load_key(self):
-        return (self.outstanding, self.ewma_step, self.node_id)
+        # an advisory reserves capacity on its target: simultaneous
+        # advisories must spread instead of all picking the same idle node
+        return (self.outstanding + self.planned, self.ewma_step,
+                self.node_id)
 
 
 class SymphonyScheduler:
@@ -51,33 +55,47 @@ class SymphonyScheduler:
             self.sessions[sid] = SessionMeta(sid)
         return self.sessions[sid]
 
-    # -- events --------------------------------------------------------------------
+    # -- planned-placement bookkeeping ---------------------------------------------
 
-    def on_advisory(self, adv: AdvisoryRequest, now: float) -> Optional[int]:
-        """Returns the chosen node (None if the policy ignores advisories)."""
-        meta = self.session(adv.session_id)
-        if adv.priority is not None:
-            meta.priority = adv.priority
-        target = self.policy.place(self, meta, advisory=True)
-        if target is None:
-            return None
-        self.planned[adv.session_id] = target
-        mgr = self.node_managers.get(target)
-        if mgr is not None:
-            mgr.on_advisory(adv, kv_node=meta.kv_node, now=now)
+    def plan(self, sid: str, target: int) -> None:
+        """Record an advisory-planned placement; the target node carries the
+        reservation in its load key until the request routes (or the
+        session ends / the node fails)."""
+        self._unplan(sid)
+        self.planned[sid] = target
+        self.nodes[target].planned += 1
+
+    def _unplan(self, sid: str) -> Optional[int]:
+        target = self.planned.pop(sid, None)
+        if target is not None and target in self.nodes:
+            st = self.nodes[target]
+            st.planned = max(0, st.planned - 1)
         return target
+
+    # -- events --------------------------------------------------------------------
+    # (advisory handling lives in ClusterRuntime._on_advisory: placement
+    # must consult the physical KV holder and the failure-recovery path,
+    # which the scheduler alone cannot see)
 
     def route(self, req: InferenceRequest, now: float) -> int:
         """Route an inference request; advisory-planned node wins."""
         meta = self.session(req.session_id)
         req.priority = max(req.priority, meta.priority)
-        target = self.planned.pop(req.session_id, None)
+        target = self._unplan(req.session_id)
         if target is None or not self.nodes[target].alive:
             target = self.policy.place(self, meta, advisory=False)
         req.node_id = target
         # session history length; the engine decides whether it is reusable
         # KV (symphony/sticky) or redundant recompute work (stateless)
-        req.cached_tokens = meta.total_tokens
+        if self.policy.reuses_kv and meta.kv_node is None \
+                and meta.total_tokens > 0:
+            # no live KV location (post-failure): the session must not be
+            # served as if its KV still existed — the runtime either recovers
+            # it explicitly from a crashed node's disk spool (and restores
+            # cached_tokens) or pays full recompute
+            req.cached_tokens = 0
+        else:
+            req.cached_tokens = meta.total_tokens
         self.nodes[target].outstanding += 1
         return target
 
@@ -99,7 +117,7 @@ class SymphonyScheduler:
 
     def end_session(self, sid: str) -> None:
         meta = self.sessions.pop(sid, None)
-        self.planned.pop(sid, None)
+        self._unplan(sid)
         if meta and meta.kv_node is not None and meta.kv_node in self.nodes:
             self.nodes[meta.kv_node].sessions = max(
                 0, self.nodes[meta.kv_node].sessions - 1)
@@ -110,6 +128,14 @@ class SymphonyScheduler:
 
     # -- fault tolerance ---------------------------------------------------------------
 
+    def release_failed(self, req: InferenceRequest, node_id: int) -> None:
+        """A request stranded on a failed node is being rerouted: release the
+        dead node's queue accounting so the counter is reconciled, not
+        leaked (route() will charge the new node when it re-places it)."""
+        st = self.nodes[node_id]
+        st.outstanding = max(0, st.outstanding - 1)
+        req.node_id = None
+
     def mark_failed(self, node_id: int) -> List[str]:
         """Node failure: reroute its sessions; KV recovers from the disk tier
         of the failed node's spool (paper's always-one-copy-on-disk makes the
@@ -119,7 +145,7 @@ class SymphonyScheduler:
                    if s.kv_node == node_id]
         for sid in orphans:
             self.sessions[sid].kv_node = None     # forces refetch/recompute
-            self.planned.pop(sid, None)
+            self._unplan(sid)
         return orphans
 
     def report_step_latency(self, node_id: int, dt: float) -> None:

@@ -100,6 +100,13 @@ class Backend:
     def import_session(self, sid: str, payload: dict) -> None:
         pass
 
+    # -- fault tolerance (sim: accounting-only, nothing physical to lose) ---
+    def crash(self) -> None:
+        pass
+
+    def recover_session(self, sid: str) -> Optional[dict]:
+        return None
+
 
 class SimBackend(Backend):
     """CostModel-timed backend: the simulator's execution model, verbatim."""
@@ -461,7 +468,13 @@ class RealBackend(Backend):
         layer is unreachable — the store must not claim the invariant."""
         if self.spool is None or sid not in self.seqs:
             return False
-        arrs = dict(n_tokens=np.int64(0))
+        st = self.seqs[sid]
+        # the pending token has no KV anywhere — it must ride along in the
+        # spool or a post-crash recovery cannot resume the sequence
+        arrs = dict(n_tokens=np.int64(0),
+                    last_token=np.int64(-1 if st.last_token is None
+                                        else st.last_token),
+                    priority=np.int64(st.priority))
         for l in range(self.cfg.n_layers):
             if sid in self.alloc[l].seqs:
                 p = self._gather_np(l, sid, self.alloc[l].seqs[sid].n_tokens)
@@ -503,3 +516,35 @@ class RealBackend(Backend):
         for l, p in payload["layers"].items():
             self.host[(sid, l)] = p
         self.stats["migrations_in"] += 1
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def crash(self) -> None:
+        """Node failure: the HBM pools and host staging tier are lost; the
+        disk spool survives and is the recovery substrate
+        (`recover_session` on this backend, driven by a live peer)."""
+        self.alloc = [PagedAllocator(self.n_pages, self.page_size)
+                      for _ in range(self.cfg.n_layers)]
+        self.host.clear()
+        self.seqs.clear()
+
+    def recover_session(self, sid: str) -> Optional[dict]:
+        """Rebuild a migration-format payload from this node's disk spool
+        (the only tier that survives `crash()`).  Consumes the spool file —
+        the session's persistent copy moves with it to the adopting node."""
+        if self.spool is None:
+            return None
+        f = self.spool / f"{sid}.npz"
+        if not f.exists():
+            return None
+        z = np.load(f)
+        n = int(z["n_tokens"])
+        layers = {l: dict(k=z[f"k{l}"], v=z[f"v{l}"], n_tokens=n)
+                  for l in range(self.cfg.n_layers)}
+        self.stats["copied_bytes"] += sum(
+            p["k"].nbytes + p["v"].nbytes for p in layers.values())
+        last = int(z["last_token"]) if "last_token" in z.files else -1
+        prio = int(z["priority"]) if "priority" in z.files else 0
+        f.unlink()
+        return dict(layers=layers, n_kv=n,
+                    last_token=None if last < 0 else last, priority=prio)

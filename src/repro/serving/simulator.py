@@ -1,15 +1,33 @@
-"""Discrete-event cluster simulator: SYMPHONY scheduler + node managers +
-continuous-batching engines over the v5e cost model.
+"""Backend-agnostic cluster runtime: SYMPHONY scheduler + node managers +
+continuous-batching engines over ONE event loop and either backend.
 
-Drives the paper's experiments at 8-replica (and larger) scale: normalized
-latency / TTFT / TPOT vs concurrent users, load imbalance, prefill-heavy
-ablation, missing advisories, prioritization.  Time is virtual seconds.
+* ``mode="sim"`` — every node runs a `SimBackend`: CostModel virtual
+  seconds, no tensors.  This is the discrete-event simulator that drives
+  the paper's experiments at 8-replica (and larger) scale: normalized
+  latency / TTFT / TPOT vs concurrent users, load imbalance, prefill-heavy
+  ablation, missing advisories, prioritization.
+* ``mode="real"`` — every node runs a `RealBackend`: per-node paged jnp KV
+  pools, a host staging tier, and a per-node disk spool.  Step durations
+  are measured wall seconds (they set ``node_busy_until``), advisories
+  trigger real cross-node `export_session`/`import_session` page copies,
+  and a node failure physically loses the fast tiers — recovery reads the
+  crashed node's spool.  This is the 2–4 node correctness/soak mode: the
+  same control flow as simulation, executed on real tensors.
+
+The failure story is shared by both modes: when a session's KV has no live
+home, the next advisory/request either recovers it from the crashed node's
+disk spool (paying disk-read cost) or falls back to full-history recompute
+— never to the pre-fix behaviour of serving continuation prefill against
+KV that no longer exists.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+import shutil
+import tempfile
+from dataclasses import dataclass
+from pathlib import Path
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
@@ -22,7 +40,7 @@ from repro.traces.sharegpt import Trace
 
 
 @dataclass
-class SimResult:
+class ClusterResult:
     completed: List[InferenceRequest]
     node_load_samples: List[List[int]]      # periodic per-node outstanding
     stats: dict
@@ -62,13 +80,60 @@ class SimResult:
                     min=float(per_node.min()),
                     ratio=float(per_node.max() / max(med, 1e-9)))
 
+    def metrics(self) -> dict:
+        """Cluster-level metrics surface, shared by sim and real modes:
+        latency/throughput/imbalance headlines plus per-node migration,
+        stall, recovery, and disk-traffic detail."""
+        eng = self.stats.get("engine", {})
+        mgr = self.stats.get("manager", {})
+        be = self.stats.get("backend", {})
+        per_node = {}
+        for i in sorted(eng):
+            m = mgr.get(i, {})
+            row = dict(
+                busy_s=eng[i].get("busy_s", 0.0),
+                stall_s=eng[i].get("stall_s", 0.0),
+                prefill_tokens=eng[i].get("prefill_tokens", 0),
+                redundant_tokens=eng[i].get("redundant_tokens", 0),
+                decode_steps=eng[i].get("decode_steps", 0),
+                preemptions=eng[i].get("preemptions", 0),
+                migrations=m.get("migrations", 0),
+                migrated_bytes=m.get("migrated_bytes", 0.0),
+                recoveries=m.get("recoveries", 0),
+                evictions=m.get("evictions", 0),
+                disk_writes=m.get("disk_writes", 0),
+            )
+            if i in be:
+                row["copied_bytes"] = be[i].get("copied_bytes", 0.0)
+                row["migrations_in"] = be[i].get("migrations_in", 0)
+            per_node[i] = row
+        return dict(
+            mode=self.stats.get("mode", "sim"),
+            completed=len(self.completed),
+            throughput_rps=self.throughput,
+            ttft_mean_s=self.mean("ttft"),
+            ttft_p99_s=self.p99("ttft"),
+            tpot_mean_s=self.mean("tpot"),
+            norm_latency_mean_s=self.mean("normalized_latency"),
+            imbalance=self.load_imbalance(),
+            per_node=per_node,
+        )
 
-class ClusterSim:
+
+class ClusterRuntime:
+    """One event loop, two backends — see module docstring."""
+
     def __init__(self, cfg: ModelConfig, n_nodes: int = 8,
                  policy: str = "symphony", hw: HardwareSpec = HardwareSpec(),
                  max_batch: int = 32, nodes_per_pod: int = 16,
-                 advisory_to_hbm: bool = True):
+                 advisory_to_hbm: bool = True, mode: str = "sim",
+                 model=None, params=None, n_pages: int = 64,
+                 page_size: int = 8, kernel_mode: str = "auto",
+                 spool_root: Optional[str] = None):
+        if mode not in ("sim", "real"):
+            raise ValueError(f"unknown mode {mode!r} (sim|real)")
         self.cfg = cfg
+        self.mode = mode
         self.cost = CostModel(cfg, hw)
         self.policy: Policy = POLICIES[policy]
         self.sched = SymphonyScheduler(n_nodes, self.policy)
@@ -79,40 +144,89 @@ class ClusterSim:
         for i, m in self.managers.items():
             m.register_peers(self.managers)
             self.sched.register_node_manager(i, m)
+
+        self.backends: Dict[int, object] = {}
+        self.spool_root: Optional[Path] = None
+        self._own_spool = False
+        if mode == "real":
+            if model is None or params is None:
+                raise ValueError("mode='real' requires model= and params=")
+            from repro.serving.backend import RealBackend
+            if self.cost.n_params is None:
+                self.cost.set_param_count(model.param_count())
+            self.spool_root = Path(spool_root) if spool_root is not None \
+                else Path(tempfile.mkdtemp(prefix="symphony_cluster_"))
+            self._own_spool = spool_root is None
+            for i in range(n_nodes):
+                self.backends[i] = RealBackend(
+                    cfg, model, params, n_pages=n_pages,
+                    page_size=page_size, kernel_mode=kernel_mode,
+                    mgr=self.managers[i],
+                    spool_dir=str(self.spool_root / f"node{i}"))
+
         from repro.serving.engine import NodeEngine
-        self.engines: Dict[int, "NodeEngine"] = {
-            i: NodeEngine(i, cfg, self.cost, self.managers[i],
-                          max_batch=max_batch,
-                          policy_reuses_kv=self.policy.reuses_kv,
-                          swap_on_preempt=self.policy.name != "stateless")
-            for i in range(n_nodes)}
+        self.engines: Dict[int, "NodeEngine"] = {}
+        for i in range(n_nodes):
+            # real mode always swaps on preemption: the drop-for-recompute
+            # path would need the driver to resubmit the full token history
+            # mid-step, which the engine cannot do (stateless still
+            # recomputes every *turn* via policy_reuses_kv=False)
+            self.engines[i] = NodeEngine(
+                i, cfg, self.cost, self.managers[i], max_batch=max_batch,
+                policy_reuses_kv=self.policy.reuses_kv,
+                swap_on_preempt=(self.policy.name != "stateless"
+                                 or mode == "real"),
+                backend=self.backends.get(i))
+            if i not in self.backends:       # sim: engine built its own
+                self.backends[i] = self.engines[i].backend
         self.advisory_to_hbm = advisory_to_hbm
+        self._dead: set = set()
+        # real-mode driver-side ledger: the dense-equivalent token stream of
+        # each session, plus a pristine per-turn snapshot so a request
+        # stranded on a failed node can be replayed from turn start
+        self._history: Dict[str, list] = {}
+        self._turn0: Dict[str, tuple] = {}
+
+    def cleanup(self) -> None:
+        """Remove a runtime-owned spool directory (real mode only)."""
+        if self._own_spool and self.spool_root is not None:
+            shutil.rmtree(self.spool_root, ignore_errors=True)
+            self.spool_root = None
 
     # -- main loop --------------------------------------------------------------------
 
     def run(self, trace: Trace, sample_every: float = 5.0,
-            fail_node_at: Optional[tuple] = None) -> SimResult:
-        """trace: iterable of (time, kind, payload) events, time-sorted."""
+            fail_node_at: Optional[tuple] = None) -> ClusterResult:
+        """trace: iterable of (time, kind, payload) events, time-sorted.
+
+        In sim mode the clock is virtual seconds throughout; in real mode
+        arrivals are virtual but every step's duration is measured wall
+        time, so ``node_busy_until`` reflects what the hardware actually
+        did."""
         eq: list = []
         seq = itertools.count()
+        self._dead = set()
+        self._history = {}
+        self._turn0 = {}
         for t, kind, payload in trace.events():
             heapq.heappush(eq, (t, next(seq), kind, payload))
-        node_busy_until = {i: 0.0 for i in self.engines}
+        if fail_node_at is not None:
+            heapq.heappush(eq, (fail_node_at[1], next(seq), "fail",
+                                fail_node_at[0]))
+        busy_until = {i: 0.0 for i in self.engines}
         load_samples: List[List[int]] = []
         next_sample = 0.0
         completed: List[InferenceRequest] = []
         inflight_done = {}
 
-        if fail_node_at is not None:
-            heapq.heappush(eq, (fail_node_at[1], next(seq), "fail",
-                                fail_node_at[0]))
+        def push(t: float, kind: str, payload) -> None:
+            heapq.heappush(eq, (t, next(seq), kind, payload))
 
-        def schedule_node(i: int, now: float):
+        def schedule_node(i: int, now: float) -> None:
             eng = self.engines[i]
             if not (eng.waiting or eng.running):
                 return
-            start = max(now, node_busy_until[i])
-            heapq.heappush(eq, (start, next(seq), "step", i))
+            push(max(now, busy_until[i]), "step", i)
 
         while eq:
             now, _, kind, payload = heapq.heappop(eq)
@@ -122,61 +236,38 @@ class ClusterSim:
                 next_sample += sample_every
 
             if kind == "advisory":
-                adv: AdvisoryRequest = payload
-                adv.issued_at = now
-                if self.policy.uses_advisory:
-                    meta = self.sched.session(adv.session_id)
-                    to_hbm = self.advisory_to_hbm and (
-                        not self.policy.prefetch_to_hbm_priority_only
-                        or (adv.priority or 0) > 0)
-                    target = self.sched.policy.place(self.sched, meta, True)
-                    if target is not None:
-                        self.sched.planned[adv.session_id] = target
-                        self.managers[target].on_advisory(
-                            adv, kv_node=meta.kv_node, now=now, to_hbm=to_hbm)
+                self._on_advisory(payload, now)
 
             elif kind == "request":
                 req: InferenceRequest = payload
                 req.arrival = now
-                node = self.sched.route(req, now)
-                # no advisory was sent / sticky: on-demand migration cost sits
-                # on the critical path via kv_stall inside the engine
-                meta = self.sched.session(req.session_id)
-                if (self.policy.reuses_kv and meta.kv_node is not None
-                        and meta.kv_node != node
-                        and req.session_id not in self.managers[node].store.entries):
-                    adv = AdvisoryRequest(req.session_id)
-                    self.managers[node].on_advisory(
-                        adv, kv_node=meta.kv_node, now=now, to_hbm=True)
-                self.engines[node].submit(req)
-                schedule_node(node, now)
+                # pristine turn snapshot: a node failure mid-turn replays
+                # the request from here (preemption mutates the live fields)
+                self._turn0[req.session_id] = (
+                    list(req.prompt_ids) if req.prompt_ids is not None
+                    else None,
+                    req.prompt_tokens, req.max_new_tokens)
+                self._dispatch(req, now, schedule_node)
 
             elif kind == "step":
                 i = payload
-                if now < node_busy_until[i] - 1e-12:
-                    heapq.heappush(eq, (node_busy_until[i], next(seq),
-                                        "step", i))
+                if not self.sched.nodes[i].alive:
+                    continue
+                if now < busy_until[i] - 1e-12:
+                    push(busy_until[i], "step", i)
                     continue
                 eng = self.engines[i]
-                before = {id(r.req) for r in eng.running}
                 n_done_before = len(eng.completed)
                 dt = eng.step(now)
-                node_busy_until[i] = now + dt
+                busy_until[i] = now + dt
                 self.sched.report_step_latency(i, dt)
                 for req in eng.completed[n_done_before:]:
-                    total = req.cached_tokens + req.prompt_tokens + req.generated
-                    self.sched.on_request_complete(req, total)
-                    if self.policy.reuses_kv:
-                        self.managers[i].mark_resident(
-                            req.session_id, total,
-                            self.cost.session_kv_bytes(total) / self.cfg.n_layers,
-                            req.priority)
+                    self._complete(req, i, now + dt)
                     completed.append(req)
-                    cb = inflight_done.get(req.session_id)
+                    cb = inflight_done.pop(req.session_id, None)
                     if cb:
                         for t, k, p in cb(req, now + dt):
-                            heapq.heappush(eq, (t, next(seq), k, p))
-                        inflight_done.pop(req.session_id, None)
+                            push(t, k, p)
                 schedule_node(i, now + dt)
 
             elif kind == "chain":
@@ -186,25 +277,176 @@ class ClusterSim:
                 inflight_done[sid] = cb
 
             elif kind == "fail":
-                i = payload
-                orphans = self.sched.mark_failed(i)
-                self.managers[i].crash()
-                eng = self.engines[i]
-                for r in list(eng.running) + list(eng.waiting):
-                    rr = r.req if hasattr(r, "req") else r
-                    rr.cached_tokens = 0
-                    rr.node_id = None
-                    node = self.sched.route(rr, now)
-                    self.engines[node].submit(rr)
-                    schedule_node(node, now)
-                eng.running.clear()
-                eng.waiting.clear()
+                self._fail(payload, now, schedule_node)
 
             elif kind == "end":
                 self.sched.end_session(payload)
 
         stats = dict(
+            mode=self.mode,
             engine={i: dict(self.engines[i].stats) for i in self.engines},
             manager={i: dict(self.managers[i].stats) for i in self.managers},
         )
-        return SimResult(completed, load_samples, stats)
+        if self.mode == "real":
+            stats["backend"] = {i: dict(self.backends[i].stats)
+                                for i in self.backends}
+        return ClusterResult(completed, load_samples, stats)
+
+    # -- event handlers ---------------------------------------------------------------
+
+    def _kv_holder(self, sid: str) -> Optional[int]:
+        """The live node whose store actually holds this session's KV.  The
+        scheduler's ``kv_node`` is only updated at request completion and is
+        stale across advisory migrations and node failures — placement
+        actions must consult physical truth, not the routing hint."""
+        for i, m in self.managers.items():
+            if self.sched.nodes[i].alive and sid in m.store.entries:
+                return i
+        return None
+
+    def _on_advisory(self, adv: AdvisoryRequest, now: float) -> None:
+        adv.issued_at = now
+        if not self.policy.uses_advisory:
+            return
+        sid = adv.session_id
+        meta = self.sched.session(sid)
+        to_hbm = self.advisory_to_hbm and (
+            not self.policy.prefetch_to_hbm_priority_only
+            or (adv.priority or 0) > 0)
+        target = self.sched.policy.place(self.sched, meta, True)
+        if target is None:
+            return
+        self.sched.plan(sid, target)
+        holder = self._kv_holder(sid)
+        if holder is None and self.policy.reuses_kv \
+                and meta.total_tokens > 0:
+            # KV lost with a failed node: recover from its disk spool now,
+            # off the critical path — the advisory's whole point
+            if self._recover(sid, target, now):
+                holder = target
+        self.managers[target].on_advisory(adv, kv_node=holder, now=now,
+                                          to_hbm=to_hbm)
+
+    def _dispatch(self, req: InferenceRequest, now: float,
+                  schedule_node) -> None:
+        sid = req.session_id
+        node = self.sched.route(req, now)
+        meta = self.sched.session(sid)
+        if self.policy.reuses_kv and meta.total_tokens > 0:
+            holder = self._kv_holder(sid)
+            if holder is None:
+                # no live copy anywhere: explicit disk recovery from the
+                # crashed node's spool, else full-history recompute — the
+                # session must never be served as if its KV still existed
+                if self._recover(sid, node, now):
+                    req.cached_tokens = meta.total_tokens
+                else:
+                    self._to_recompute(req, meta)
+            else:
+                if req.cached_tokens == 0:
+                    # route() zeroed it (mark_failed staled kv_node) but the
+                    # KV does live on a healthy node — e.g. it was advisory-
+                    # migrated away before its old home crashed
+                    req.cached_tokens = meta.total_tokens
+                if holder != node:
+                    # no advisory was sent / sticky: on-demand migration
+                    # cost sits on the critical path via kv_stall inside
+                    # the engine
+                    self.managers[node].on_advisory(
+                        AdvisoryRequest(sid), kv_node=holder, now=now,
+                        to_hbm=True)
+        self.engines[node].submit(req)
+        schedule_node(node, now)
+
+    def _recover(self, sid: str, node: int, now: float) -> bool:
+        for j in sorted(self._dead):
+            if self.managers[node].recover_from_spool(
+                    sid, self.managers[j], now):
+                return True
+        return False
+
+    def _to_recompute(self, req: InferenceRequest, meta) -> None:
+        """Lost KV with no recoverable spool copy: the whole session context
+        becomes fresh prefill work (the recompute cost the paper's recovery
+        story is priced against)."""
+        sid = req.session_id
+        req.cached_tokens = 0
+        if self.mode == "real":
+            turn = self._turn0.get(sid)
+            prompt = list(turn[0]) if turn and turn[0] is not None \
+                else list(req.prompt_ids or [])
+            req.prompt_ids = list(self._history.get(sid, [])) + prompt
+            req.prompt_tokens = len(req.prompt_ids)
+            if turn is not None:
+                req.max_new_tokens = turn[2]
+            req.output_ids = []
+            req.generated = 0
+            req.first_token_at = None
+            for j, m in self.managers.items():
+                if self.sched.nodes[j].alive:
+                    m.drop_session(sid)      # no stale partial state anywhere
+        else:
+            req.prompt_tokens += meta.total_tokens
+        meta.kv_node = None
+
+    def _complete(self, req: InferenceRequest, i: int, t_done: float) -> None:
+        sid = req.session_id
+        turn = self._turn0.pop(sid, None)
+        if self.mode == "real":
+            # page-accurate truth, robust across preemption round trips
+            total = self.backends[i].session_tokens(sid)
+            if turn is not None and turn[0] is not None:
+                self._history.setdefault(sid, []).extend(
+                    list(turn[0]) + list(req.output_ids or []))
+        else:
+            total = req.cached_tokens + req.prompt_tokens + req.generated
+        self.sched.on_request_complete(req, total)
+        if self.policy.reuses_kv:
+            if self.mode == "sim":
+                self.managers[i].mark_resident(
+                    sid, total,
+                    self.cost.session_kv_bytes(total) / self.cfg.n_layers,
+                    req.priority)
+            if self.policy.uses_advisory:
+                # background disk write-through: the always-one-copy-on-disk
+                # invariant that makes post-crash recovery possible (only
+                # this session's copy can be stale — growth resets on_disk)
+                self.managers[i].flush_session(sid, t_done)
+
+    def _reset_to_turn_start(self, req: InferenceRequest) -> None:
+        """Rewind a request stranded on a failed node to its pristine
+        turn-start form (preemption may have consumed prompt_ids and
+        rewritten the token budgets)."""
+        turn = self._turn0.get(req.session_id)
+        if turn is not None:
+            ids, prompt_tokens, max_new = turn
+            req.prompt_ids = list(ids) if ids is not None else None
+            req.prompt_tokens = prompt_tokens
+            req.max_new_tokens = max_new
+        req.cached_tokens = 0
+        req.generated = 0
+        req.first_token_at = None
+        if req.output_ids is not None:
+            req.output_ids = []
+
+    def _fail(self, i: int, now: float, schedule_node) -> None:
+        self.sched.mark_failed(i)
+        self.managers[i].crash()
+        self.backends[i].crash()
+        self._dead.add(i)
+        eng = self.engines[i]
+        stranded = [r.req if hasattr(r, "req") else r
+                    for r in list(eng.running) + list(eng.waiting)]
+        eng.running.clear()
+        eng.waiting.clear()
+        for rr in stranded:
+            # reconcile the dead node's queue accounting (route() charged it
+            # at admission; nothing will ever complete there)
+            self.sched.release_failed(rr, i)
+            self._reset_to_turn_start(rr)
+            self._dispatch(rr, now, schedule_node)
+
+
+# Backwards-compatible names: the simulator is the runtime in sim mode.
+ClusterSim = ClusterRuntime
+SimResult = ClusterResult

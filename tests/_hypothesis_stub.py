@@ -96,6 +96,12 @@ def given(*arg_strats, **kw_strats):
                 except _Unsatisfied:
                     continue
                 ran += 1
+            if ran == 0:
+                # mirror real hypothesis' Unsatisfied health check: a test
+                # whose assume() rejected every example must not pass green
+                raise AssertionError(
+                    f"{fn.__qualname__}: assume() rejected all "
+                    f"{attempts} generated examples")
         wrapper.__name__ = fn.__name__
         wrapper.__qualname__ = fn.__qualname__
         wrapper.__doc__ = fn.__doc__

@@ -56,9 +56,8 @@ def test_allocator_state_machine(ops):
         for sid2, n in model.items():
             s = a.seqs[sid2]
             assert s.n_tokens == n
-            # enough pages to hold the tokens, never more than one spare
-            assert len(s.pages) >= a.pages_for(n)
-            assert len(s.pages) <= max(a.pages_for(n), a.pages_for(n))
+            # exactly enough pages to hold the tokens, no spares
+            assert len(s.pages) == a.pages_for(n)
 
 
 @settings(max_examples=30, deadline=None)
