@@ -2,6 +2,13 @@
 interpret mode, so the us_per_call column is NOT TPU performance — the
 derived column carries the analytic VMEM working set + arithmetic intensity
 the roofline uses; on a real TPU the same harness times the compiled kernel.
+
+``bench_step`` is the serving-level companion: a steady-state serving step
+(1 prefill + N decode steps) through the RealBackend's fused bucketed
+dispatch, at two batch sizes and two turn lengths.  It writes
+``results/bench/BENCH_step.json`` — per-decode-step latency, fused-step
+compile counts, and copied bytes — the perf-trajectory artifact CI uploads
+and bounds (unbounded recompilation fails the workflow).
 """
 from __future__ import annotations
 
@@ -11,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, save
 
 
 def _time(fn, *args, reps=3):
@@ -66,3 +73,86 @@ def bench_kernels():
                x, dA, Bm, Cm)
     emit("kernel.ssd_scan.us", us,
          f"interpret={interp} S={S2s} chunk=64 state={N2}x{P2} in VMEM")
+
+
+def bench_step(decode_steps: int = 16):
+    """Steady-state serving-step bench through RealBackend (fused bucketed
+    dispatch, trace_logits off): 1 prefill + ``decode_steps`` decode steps
+    at two batch sizes x two turn lengths.  Steps that paid a shape-bucket
+    compile (the compile census advanced during the step) are counted but
+    excluded from the latency stats, so decode_ms_* tracks the recompile-
+    free hot path rather than one-off interpret-mode compile time."""
+    from repro.configs import get_config
+    from repro.core.advisory import InferenceRequest
+    from repro.core.node_manager import NodeManager
+    from repro.models.registry import get_model
+    from repro.serving.backend import RealBackend
+    from repro.serving.cost_model import CostModel, HardwareSpec
+    from repro.serving.engine import NodeEngine
+
+    cfg = get_config("llama3-8b").reduced(dtype="float32")
+    model = get_model(cfg)                   # shared: jit cache == bucket set
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    payload = dict(decode_steps=decode_steps, configs={})
+    for B, plen in ((1, 12), (2, 12), (1, 21), (2, 21)):
+        cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+        cost.set_param_count(model.param_count())
+        mgr = NodeManager(0, cfg, cost)
+        be = RealBackend(cfg, model, params, n_pages=64, page_size=8,
+                         mgr=mgr, trace_logits=False)
+        eng = NodeEngine(0, cfg, cost, mgr, max_batch=8, backend=be)
+        for i in range(B):
+            prompt = list(map(int, rng.integers(0, cfg.vocab, plen)))
+            eng.submit(InferenceRequest(
+                session_id=f"s{i}", prompt_tokens=plen,
+                max_new_tokens=decode_steps + 1, prompt_ids=prompt))
+        now, steps, compiled = 0.0, [], []
+        t0 = time.perf_counter()
+        while eng.waiting or eng.running:
+            s0 = time.perf_counter()
+            census = be.compile_counts()
+            now += eng.step(now)
+            steps.append(time.perf_counter() - s0)
+            compiled.append(be.compile_counts() != census)
+        wall = time.perf_counter() - t0
+        # step 0 carries the prefill; compile-paying steps are excluded from
+        # the latency stats (reported separately) so the numbers track the
+        # recompile-free hot path
+        dsteps = np.asarray([s for s, c in zip(steps[1:], compiled[1:])
+                             if not c])
+        # every step paying a compile leaves no steady state to report; use
+        # null (valid strict JSON) rather than NaN for those stats
+        ms = lambda x: float(x * 1e3) if dsteps.size else None
+        key = f"B{B}_plen{plen}"
+        payload["configs"][key] = dict(
+            batch=B, turn_len=plen, wall_s=wall,
+            steady_steps=int(dsteps.size),
+            compile_steps=int(sum(compiled)),
+            decode_ms_mean=ms(dsteps.mean() if dsteps.size else 0),
+            decode_ms_median=ms(np.median(dsteps) if dsteps.size else 0),
+            decode_ms_p90=ms(np.percentile(dsteps, 90) if dsteps.size else 0),
+            copied_bytes=be.stats["copied_bytes"],
+            compile_counts=be.compile_counts())   # cumulative across configs
+        cc = be.compile_counts()
+        emit(f"step.{key}.decode_ms",
+             float(dsteps.mean() * 1e3) if dsteps.size else float("nan"),
+             f"steady_steps={dsteps.size} "
+             f"compile_steps={int(sum(compiled))} "
+             f"compiles=p{cc['prefill']}/d{cc['decode']}")
+    payload["compile_counts"] = model.paged_compile_counts()
+    save("BENCH_step", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--step", action="store_true",
+                    help="emit the BENCH_step.json serving-step artifact")
+    args = ap.parse_args()
+    if args.step:
+        bench_step()
+    else:
+        bench_kernels()

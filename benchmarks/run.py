@@ -17,7 +17,7 @@ def main() -> None:
 
     from benchmarks import fig_serving, fig_tokens
     from benchmarks.roofline_table import emit_roofline
-    from benchmarks.kernel_bench import bench_kernels
+    from benchmarks.kernel_bench import bench_kernels, bench_step
 
     t0 = time.time()
     sections = {
@@ -42,6 +42,7 @@ def main() -> None:
             fracs=(0.1, 0.3, 0.5) if args.full else (0.1, 0.5)),
         "roofline": emit_roofline,
         "kernels": bench_kernels,
+        "step": bench_step,
     }
     for name, fn in sections.items():
         if args.only and args.only != name:

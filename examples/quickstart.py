@@ -66,7 +66,7 @@ def main():
     cost.set_param_count(model.param_count())
     mgr = NodeManager(0, cfg, cost)
     backend = RealBackend(cfg, model, params, n_pages=64, page_size=8,
-                          mgr=mgr)
+                          mgr=mgr, trace_logits=False)
     eng = NodeEngine(0, cfg, cost, mgr, max_batch=4, backend=backend)
     out_symphony, now = [], 0.0
     for turn in turns:

@@ -51,7 +51,8 @@ def main():
     rt = ClusterRuntime(cfg, n_nodes=N_NODES, policy="symphony",
                         hw=HardwareSpec(chips_per_replica=1),
                         max_batch=8, mode="real", model=model,
-                        params=params, n_pages=64, page_size=8)
+                        params=params, n_pages=64, page_size=8,
+                        trace_logits=False)   # token-exact verify; no trail
     trace = MultiTurnRealTrace(cfg, n_sessions=N_SESSIONS, n_turns=N_TURNS,
                                prompt_len=10, gen=GEN, seed=1,
                                fail_after_turn=2)

@@ -2,14 +2,24 @@
 
 Multi-turn continuation is SYMPHONY's compute saving: turn t+1 prefills only
 its NEW tokens against the session's cached K/V (q_offset = n_cached), so
-the kernel takes Skv >= Sq and a static q_offset.
+the kernel takes Skv >= Sq and a q_offset.
+
+``q_offset`` is a TRACED scalar riding in scalar-prefetch SMEM, not a static
+jit argument: one compiled kernel serves every turn/context length that maps
+to the same (Sq, Skv) shape bucket (the serving backend pads to power-of-two
+buckets), instead of recompiling per turn.  The causal mask
+``q_offset + i >= j`` doubles as the valid-kv mask — padded key positions
+beyond q_offset + Sq sit strictly in the masked future of every valid query
+row, and padded query rows (i >= n_valid) produce garbage that the caller
+never reads.
 
 Grid: (B, Hkv, q_blocks, k_blocks), k innermost (sequential) with running
 (m, l, acc) in VMEM scratch.  The q block carries all G = H/Hkv grouped
 query heads flattened into MXU rows ((bq*G) x D), k/v tiles are
 (bk x D) — VMEM-resident, hardware-aligned when bq*G and bk are multiples
 of 128.  Fully-masked k blocks are skipped via pl.when (exact causal work,
-unlike the rectangular jnp fallback)."""
+unlike the rectangular jnp fallback); the skip predicate is computed from
+the prefetched q_offset, so it stays shape-bucket-generic."""
 from __future__ import annotations
 
 import functools
@@ -21,11 +31,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, q_offset: int, bq: int, bk: int, G: int):
+def _kernel(qoff_ref,                       # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, G: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
+    q_offset = qoff_ref[0]
 
     @pl.when(ki == 0)
     def _init():
@@ -65,37 +77,43 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, 0] = out.reshape(bq, G, -1).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("q_offset", "bq", "bk", "interpret"))
-def flash_prefill(q, k, v, *, q_offset: int = 0, bq: int = 128, bk: int = 128,
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_prefill(q, k, v, q_offset=0, *, bq: int = 128, bk: int = 128,
                   interpret: bool = True):
-    """q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D). Returns (B,Sq,H,D)."""
+    """q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D); q_offset: traced int scalar.
+    Returns (B,Sq,H,D)."""
     B, Sq, H, D = q.shape
     _, Skv, Hkv, _ = k.shape
     G = H // Hkv
     bq = min(bq, Sq)
     bk = min(bk, Skv)
     assert Sq % bq == 0 and Skv % bk == 0
+    qoff = jnp.asarray(q_offset, jnp.int32).reshape((1,))
     q5 = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4)  # (B,Hkv,Sq,G,D)
 
     grid = (B, Hkv, Sq // bq, Skv // bk)
-    kern = functools.partial(_kernel, q_offset=q_offset, bq=bq, bk=bk, G=G)
-    out = pl.pallas_call(
-        kern,
+    kern = functools.partial(_kernel, bq=bq, bk=bk, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, bq, G, D), lambda b, h, qi, ki: (b, h, qi, 0, 0)),
-            pl.BlockSpec((1, bk, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
-            pl.BlockSpec((1, bk, 1, D), lambda b, h, qi, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, 1, bq, G, D),
+                         lambda b, h, qi, ki, qo: (b, h, qi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, qi, ki, qo: (b, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, qi, ki, qo: (b, ki, h, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, G, D),
-                               lambda b, h, qi, ki: (b, h, qi, 0, 0)),
+                               lambda b, h, qi, ki, qo: (b, h, qi, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((bq * G, 1), jnp.float32),
             pltpu.VMEM((bq * G, 1), jnp.float32),
             pltpu.VMEM((bq * G, D), jnp.float32),
         ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq, G, D), q.dtype),
         interpret=interpret,
-    )(q5, k, v)
+    )(qoff, q5, k, v)
     return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, D)

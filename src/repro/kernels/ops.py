@@ -1,6 +1,13 @@
 """Public jit'd kernel entrypoints with automatic backend dispatch:
 Pallas on TPU (interpret=False), interpret-mode on CPU for validation,
-pure-jnp oracle as the universal fallback."""
+pure-jnp oracle as the universal fallback.
+
+Tile sizes default to "largest divisor of the (bucketed) sequence length
+<= 128" so the serving path never has to thread static block shapes through
+its jit boundary — with power-of-two shape buckets this resolves to
+min(S, 128), the hardware-aligned tile.  ``q_offset`` is traced end to end
+(scalar-prefetch SMEM inside the Pallas kernel), which is what makes one
+compiled prefill kernel serve every turn/context length in a bucket."""
 from __future__ import annotations
 
 import jax
@@ -14,6 +21,21 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _auto_tile(n: int, cap: int = 128) -> int:
+    """Largest divisor of n that is <= cap (n itself when n <= cap).  A
+    long sequence with only tiny divisors would silently degrade to an
+    almost-elementwise grid — reject it loudly instead; pad to a bucketed
+    length (the serving path always does) or pass explicit tiles."""
+    t = min(n, cap)
+    while t > 1 and n % t:
+        t -= 1
+    if n > cap and t < 8:
+        raise ValueError(
+            f"no usable tile for length {n} (best divisor <= {cap} is {t}); "
+            f"pad to a power-of-two bucket or pass bq/bk explicitly")
+    return max(t, 1)
+
+
 def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens,
                     mode: str = "auto"):
     """mode: auto | pallas | interpret | ref"""
@@ -25,10 +47,11 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens,
                   interpret=interpret)
 
 
-def flash_prefill(q, k, v, q_offset: int = 0, mode: str = "auto",
-                  bq: int = 128, bk: int = 128):
+def flash_prefill(q, k, v, q_offset=0, mode: str = "auto",
+                  bq=None, bk=None):
     if mode == "ref":
         return ref.flash_prefill_ref(q, k, v, q_offset)
     interpret = not _on_tpu() if mode == "auto" else (mode == "interpret")
-    return _flash(q, k, v, q_offset=q_offset, bq=bq, bk=bk,
-                  interpret=interpret)
+    bq = _auto_tile(q.shape[1]) if bq is None else bq
+    bk = _auto_tile(k.shape[1]) if bk is None else bk
+    return _flash(q, k, v, q_offset, bq=bq, bk=bk, interpret=interpret)

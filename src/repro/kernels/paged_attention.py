@@ -14,6 +14,14 @@ PagedAttention gather, reshaped for VMEM/MXU:
 
 Pages are the unit SYMPHONY migrates between tiers/nodes, so serving decode
 reads KV exactly in the layout the node manager stores it.
+
+Dynamic-masking contract (what shape-bucketed dispatch leans on): ctx_lens
+and block tables are traced data, never static shapes, so one compiled
+kernel serves every context length that fits a (B, maxp) bucket.  A batch
+row padded with ctx_len = 0 skips every page (`valid > 0` is never true) and
+finishes as zeros; 0-padded table columns beyond a row's ctx are likewise
+fully masked, so their page contents — live KV of other sessions — never
+leak into the output.
 """
 from __future__ import annotations
 

@@ -23,6 +23,13 @@ class DenseLM:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.dtype)
+        # fused paged serving steps, jitted lazily.  jit compiles exactly
+        # once per distinct (arg shapes/dtypes, static kwargs) signature, so
+        # recording the signatures we dispatch gives an exact compile census
+        # without reaching into jit internals (see paged_compile_counts)
+        self._prefill_jit = None
+        self._decode_jit = None
+        self._compile_keys = dict(prefill=set(), decode=set())
 
     # -- parameters ---------------------------------------------------------
 
@@ -221,120 +228,155 @@ class DenseLM:
 
     # -- paged entry points (RealBackend serving path) ------------------------
     #
-    # Same math as prefill()/decode_step(), but the KV lives in per-layer
-    # physical page pools (P, page, Hkv, D) addressed through block tables —
-    # the layout the SYMPHONY node manager migrates between tiers.  New-token
-    # KV is scattered into caller-supplied (page, slot) destinations *before*
-    # attention, and attention reads back through the pool, so any
-    # allocator/kernel disagreement shows up as a numerical mismatch.
+    # Same math as prefill()/decode_step(), but the KV lives in ONE stacked
+    # physical page pool (L, P, page, Hkv, D) addressed through block
+    # tables — the layout the SYMPHONY node manager migrates between tiers,
+    # and the layout that lets tier transfers move all L layers in a single
+    # device<->host copy.  The layer stack is a `jax.lax.scan` over the
+    # already-stacked block weights with the KV scatter, the attention
+    # kernel, and the FFN inside the scanned body: one fused dispatch per
+    # serving step instead of n_layers separate scatters and kernel calls.
+    #
+    # Every data-dependent quantity (n_cached, n_valid, ctx_lens) is traced,
+    # so the jit cache is keyed only on the SHAPE BUCKET (padded Sq, table
+    # width, padded batch) the backend dispatches into — steady-state serving
+    # is recompile-free.  Padded token lanes scatter their KV into a caller-
+    # supplied trash slot and their outputs are never read (attention rows
+    # are independent, the FFN is position-wise, and logits/argmax are taken
+    # at valid positions only).  The argmax stays on device so decode
+    # returns token ids without a full-logits host sync.
 
-    def _block_paged(self, x, w, l, *, positions, k_pools, v_pools,
-                     write, attend):
-        """One layer: project qkv, rope, scatter new KV into layer ``l``'s
-        pools via ``write``, compute attention via ``attend``, then FFN.
-        Returns the updated residual stream."""
-        c = self.cfg
-        B, S, _ = x.shape
-        h = L.rms_norm(x, w["ln1"], c.norm_eps)
-        q = (h @ w["wq"]).reshape(B, S, c.n_heads, c.d_head)
-        k = (h @ w["wk"]).reshape(B, S, c.n_kv_heads, c.d_head)
-        v = (h @ w["wv"]).reshape(B, S, c.n_kv_heads, c.d_head)
-        if c.qk_norm:
-            q = L.rms_norm(q, w["qn"], c.norm_eps)
-            k = L.rms_norm(k, w["kn"], c.norm_eps)
-        q = L.apply_rope(q, positions, c.rope_theta)
-        k = L.apply_rope(k, positions, c.rope_theta)
-        k_pools[l], v_pools[l] = write(l, k, v)
-        o = attend(l, q)
-        x = x + o.reshape(B, S, -1) @ w["wo"]
-        h2 = L.rms_norm(x, w["ln2"], c.norm_eps)
-        return x + L.swiglu(h2, w["w1"], w["w3"], w["w2"])
-
-    def prefill_paged(self, params, token_ids, k_pools, v_pools, tables,
-                      slot_pages, slot_offs, n_cached: int,
-                      kernel_mode: str = "auto"):
-        """Continuation prefill of ONE sequence against paged KV.
-
-        token_ids: (Sq,) new tokens this turn (the engine prepends the
-          previous turn's pending generated token); their KV lands at
-          absolute positions [n_cached, n_cached + Sq).
-        k_pools/v_pools: length-L lists of (P, page, Hkv, D) pools.
-        tables[l]: (n_pages_l,) int32 block table covering the sequence's
-          n_cached + Sq tokens in layer l's pool.
-        slot_pages[l]/slot_offs[l]: (Sq,) physical destination of each new
-          token's KV in layer l.
-        Returns (last-position logits (V,), k_pools, v_pools).
-        """
+    def _paged_body(self, positions, ctx_lens=None, kernel_mode="auto",
+                    n_cached=None):
+        """Scanned per-layer body shared by prefill_paged/decode_paged."""
         from repro.kernels import ops
+        c = self.cfg
+
+        def body(x, xs):
+            w, kp, vp, table, sp, so = xs
+            B, S, _ = x.shape
+            h = L.rms_norm(x, w["ln1"], c.norm_eps)
+            q = (h @ w["wq"]).reshape(B, S, c.n_heads, c.d_head)
+            k = (h @ w["wk"]).reshape(B, S, c.n_kv_heads, c.d_head)
+            v = (h @ w["wv"]).reshape(B, S, c.n_kv_heads, c.d_head)
+            if c.qk_norm:
+                q = L.rms_norm(q, w["qn"], c.norm_eps)
+                k = L.rms_norm(k, w["kn"], c.norm_eps)
+            q = L.apply_rope(q, positions, c.rope_theta)
+            k = L.apply_rope(k, positions, c.rope_theta)
+            if ctx_lens is None:               # prefill: one sequence
+                kp = kp.at[sp, so].set(k[0].astype(kp.dtype))
+                vp = vp.at[sp, so].set(v[0].astype(vp.dtype))
+                Hkv, D = kp.shape[2], kp.shape[3]
+                kd = kp[table].reshape(-1, Hkv, D)[None]
+                vd = vp[table].reshape(-1, Hkv, D)[None]
+                o = ops.flash_prefill(q, kd, vd, n_cached, mode=kernel_mode)
+            else:                              # decode: one token per row
+                kp = kp.at[sp, so].set(k[:, 0].astype(kp.dtype))
+                vp = vp.at[sp, so].set(v[:, 0].astype(vp.dtype))
+                o = ops.paged_attention(q[:, 0], kp, vp, table, ctx_lens,
+                                        mode=kernel_mode)[:, None]
+            x = x + o.reshape(B, S, -1) @ w["wo"]
+            h2 = L.rms_norm(x, w["ln2"], c.norm_eps)
+            x = x + L.swiglu(h2, w["w1"], w["w3"], w["w2"])
+            return x, (kp, vp)
+
+        return body
+
+    def _prefill_paged_impl(self, params, token_ids, k_pool, v_pool, tables,
+                            slot_pages, slot_offs, n_cached, n_valid,
+                            *, kernel_mode):
         c = self.cfg
         ids = jnp.asarray(token_ids, jnp.int32)[None]
         x = self._embed(params, ids)
         Sq = x.shape[1]
-        total = n_cached + Sq
         positions = n_cached + jnp.arange(Sq)[None, :]
-        k_pools, v_pools = list(k_pools), list(v_pools)
-
-        def write(l, k, v):
-            dt = k_pools[l].dtype
-            kp = k_pools[l].at[slot_pages[l], slot_offs[l]].set(
-                k[0].astype(dt))
-            vp = v_pools[l].at[slot_pages[l], slot_offs[l]].set(
-                v[0].astype(dt))
-            return kp, vp
-
-        def attend(l, q):
-            Hkv, D = k_pools[l].shape[2], k_pools[l].shape[3]
-            # read the full context back THROUGH the pool (pages validate)
-            kd = k_pools[l][tables[l]].reshape(-1, Hkv, D)[:total][None]
-            vd = v_pools[l][tables[l]].reshape(-1, Hkv, D)[:total][None]
-            return ops.flash_prefill(q, kd, vd, q_offset=n_cached,
-                                     mode=kernel_mode, bq=Sq, bk=total)
-
-        for l in range(c.n_layers):
-            w = jax.tree.map(lambda a: a[l], params["blocks"])
-            x = self._block_paged(x, w, l, positions=positions,
-                                  k_pools=k_pools, v_pools=v_pools,
-                                  write=write, attend=attend)
+        body = self._paged_body(positions, kernel_mode=kernel_mode,
+                                n_cached=n_cached)
+        x, (k_pool, v_pool) = jax.lax.scan(
+            body, x, (params["blocks"], k_pool, v_pool, tables,
+                      slot_pages, slot_offs))
         x = L.rms_norm(x, params["ln_f"], c.norm_eps)
-        return self._unembed(params, x[0, -1]), k_pools, v_pools
+        logits = self._unembed(params, x[0, n_valid - 1])
+        tok = jnp.argmax(logits[:c.vocab]).astype(jnp.int32)
+        return tok, logits, k_pool, v_pool
 
-    def decode_paged(self, params, tokens, k_pools, v_pools, tables,
-                     ctx_lens, slot_pages, slot_offs,
-                     kernel_mode: str = "auto"):
-        """One batched decode iteration over paged KV.
-
-        tokens: (B,) each sequence's pending token (KV not yet written).
-        tables[l]: (B, maxp_l) int32; ctx_lens: (B,) valid tokens INCLUDING
-        the pending token being written this step; slot_pages[l]/slot_offs[l]:
-        (B,) destination of the pending token's KV in layer l.
-        Returns (logits (B, V), k_pools, v_pools).
-        """
-        from repro.kernels import ops
+    def _decode_paged_impl(self, params, tokens, k_pool, v_pool, tables,
+                           ctx_lens, slot_pages, slot_offs, *, kernel_mode):
         c = self.cfg
         x = self._embed(params, jnp.asarray(tokens, jnp.int32)[:, None])
         positions = (ctx_lens - 1)[:, None]
-        k_pools, v_pools = list(k_pools), list(v_pools)
-
-        def write(l, k, v):
-            dt = k_pools[l].dtype
-            kp = k_pools[l].at[slot_pages[l], slot_offs[l]].set(
-                k[:, 0].astype(dt))
-            vp = v_pools[l].at[slot_pages[l], slot_offs[l]].set(
-                v[:, 0].astype(dt))
-            return kp, vp
-
-        def attend(l, q):
-            o = ops.paged_attention(q[:, 0], k_pools[l], v_pools[l],
-                                    tables[l], ctx_lens, mode=kernel_mode)
-            return o[:, None]
-
-        for l in range(c.n_layers):
-            w = jax.tree.map(lambda a: a[l], params["blocks"])
-            x = self._block_paged(x, w, l, positions=positions,
-                                  k_pools=k_pools, v_pools=v_pools,
-                                  write=write, attend=attend)
+        body = self._paged_body(positions, ctx_lens=ctx_lens,
+                                kernel_mode=kernel_mode)
+        x, (k_pool, v_pool) = jax.lax.scan(
+            body, x, (params["blocks"], k_pool, v_pool, tables,
+                      slot_pages, slot_offs))
         x = L.rms_norm(x, params["ln_f"], c.norm_eps)
-        return self._unembed(params, x[:, 0]), k_pools, v_pools
+        logits = self._unembed(params, x[:, 0])
+        toks = jnp.argmax(logits[:, :c.vocab], axis=-1).astype(jnp.int32)
+        return toks, logits, k_pool, v_pool
+
+    def prefill_paged(self, params, token_ids, k_pool, v_pool, tables,
+                      slot_pages, slot_offs, n_cached, n_valid,
+                      kernel_mode: str = "auto"):
+        """Fused continuation prefill of ONE sequence against paged KV.
+
+        token_ids: (Sq,) int32, bucket-padded; the first ``n_valid`` are the
+          real tokens of this turn (engine prepends the pending token); their
+          KV lands at absolute positions [n_cached, n_cached + n_valid).
+        k_pool/v_pool: (L, P, page, Hkv, D) stacked pools.
+        tables: (L, T) int32 block tables covering the sequence (0-padded).
+        slot_pages/slot_offs: (L, Sq) destination of each token's KV; padded
+          lanes must point at a trash slot.
+        n_cached/n_valid: traced int32 scalars.
+        Returns (argmax token id (), logits (V,), k_pool, v_pool).
+        """
+        if self._prefill_jit is None:
+            # donate the pools: the backend unconditionally replaces its
+            # references with the returned pools, and aliasing input to
+            # output keeps peak memory at 1x the stacked pool per side
+            self._prefill_jit = jax.jit(self._prefill_paged_impl,
+                                        static_argnames=("kernel_mode",),
+                                        donate_argnums=(2, 3))
+        args = (params, token_ids, k_pool, v_pool, tables,
+                slot_pages, slot_offs, n_cached, n_valid)
+        self._compile_keys["prefill"].add(self._shape_sig(args, kernel_mode))
+        return self._prefill_jit(*args, kernel_mode=kernel_mode)
+
+    def decode_paged(self, params, tokens, k_pool, v_pool, tables,
+                     ctx_lens, slot_pages, slot_offs,
+                     kernel_mode: str = "auto"):
+        """One fused batched decode iteration over paged KV.
+
+        tokens: (B,) bucket-padded pending tokens (KV not yet written).
+        k_pool/v_pool: (L, P, page, Hkv, D) stacked pools.
+        tables: (L, B, T) int32 (0-padded); ctx_lens: (B,) valid tokens
+        INCLUDING the pending token (0 for padded rows, which masks the whole
+        row out of attention); slot_pages/slot_offs: (L, B) destination of
+        the pending token's KV (trash slot for padded rows).
+        Returns (argmax token ids (B,), logits (B, V), k_pool, v_pool).
+        """
+        if self._decode_jit is None:
+            self._decode_jit = jax.jit(self._decode_paged_impl,
+                                       static_argnames=("kernel_mode",),
+                                       donate_argnums=(2, 3))
+        args = (params, tokens, k_pool, v_pool, tables,
+                ctx_lens, slot_pages, slot_offs)
+        self._compile_keys["decode"].add(self._shape_sig(args, kernel_mode))
+        return self._decode_jit(*args, kernel_mode=kernel_mode)
+
+    @staticmethod
+    def _shape_sig(args, kernel_mode: str):
+        """jit cache key stand-in: shapes + dtypes of every array leaf plus
+        the static kwarg — distinct signatures == distinct compilations."""
+        return (kernel_mode,) + tuple(
+            (tuple(a.shape), str(getattr(a, "dtype", type(a))))
+            for a in jax.tree.leaves(args) if hasattr(a, "shape"))
+
+    def paged_compile_counts(self) -> Dict[str, int]:
+        """Number of distinct XLA compilations of the fused serving steps
+        (one per shape bucket; the recompile-free invariant's observable)."""
+        return {k: len(v) for k, v in self._compile_keys.items()}
 
     # -- dry-run specs --------------------------------------------------------
 

@@ -7,16 +7,24 @@ batched decode, cooperative purge, preemption) is identical in both modes:
 * `SimBackend` — every step charges CostModel seconds and no tensor moves.
   This is the discrete-event simulator's backend and reproduces the paper's
   cluster-scale numbers.
-* `RealBackend` — owns per-layer physical page pools ((P, page, Hkv, D)
-  jnp arrays standing in for HBM, plus a numpy host staging tier and an
-  optional .npz disk spool) and executes one engine iteration for real:
-  continuation prefill via the `flash_prefill` kernel writing new-token KV
-  into pages handed out by `PagedAllocator`, batched decode via the
-  `paged_attention` Pallas kernel over `batch_block_tables`/`ctx_lens`, and
-  preemption swap-out/swap-in that copies actual page contents between
-  tiers.  `TieredKVStore` (via the attached NodeManager) stays the single
-  source of truth for placement accounting; the backend mirrors it with
-  physical copies.
+* `RealBackend` — owns ONE stacked physical page pool per side
+  ((L, P+1, page, Hkv, D) jnp arrays standing in for HBM; page index P is a
+  trash page for padded-lane scatter), plus a numpy host staging tier and an
+  optional .npz disk spool, and executes one engine iteration as ONE fused,
+  recompile-free dispatch: the model scans the layer stack with KV scatter,
+  the `flash_prefill`/`paged_attention` Pallas kernels, and the FFN inside
+  the scanned body, and returns the argmax token id computed on device.
+  Dispatch is SHAPE-BUCKETED — new-token count, block-table width, and
+  decode batch are padded to power-of-two buckets, and everything
+  data-dependent (n_cached, n_valid, ctx_lens) is traced — so each fused
+  step compiles at most once per bucket instead of once per turn/context
+  length.  Tier transfers (swap/evict/promote/persist/export) ride the
+  stacked layout: all layers of a session move in one device<->host copy of
+  exactly the valid token range.  Per-layer `PagedAllocator`s remain the
+  placement bookkeeping (the paper's layer-granular tiering is untouched);
+  `TieredKVStore` (via the attached NodeManager) stays the single source of
+  truth for placement accounting; the backend mirrors it with physical
+  copies.
 
 Token-id semantics in real mode (the "pending token" invariant): the last
 generated token of a sequence never has KV written — it is fed as the next
@@ -149,19 +157,36 @@ class _SeqState:
     priority: int = 0
 
 
-class RealBackend(Backend):
-    """Real JAX execution over per-layer paged KV pools.
+def _bucket(n: int, floor: int = 1) -> int:
+    """Smallest power-of-two >= n (and >= floor): the shape-bucket lattice."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
 
-    The "HBM" tier is a list of per-layer (P, page, Hkv, D) jnp pools; the
-    host tier is numpy arrays keyed (sid, layer); the optional disk tier is
-    an .npz spool directory.  One PagedAllocator per layer hands out pages —
-    allocators stay in lockstep except where the node manager evicted
-    individual layers (the paper's layer-granular placement).
+
+class RealBackend(Backend):
+    """Real JAX execution over a stacked paged KV pool.
+
+    The "HBM" tier is one (L, P+1, page, Hkv, D) jnp pool per side (page
+    index P is the trash page that padded lanes scatter into — it is never
+    allocated or gathered); the host tier is numpy arrays keyed (sid,
+    layer); the optional disk tier is an .npz spool directory.  One
+    PagedAllocator per layer hands out pages — allocators stay in lockstep
+    except where the node manager evicted individual layers (the paper's
+    layer-granular placement).
+
+    ``trace_logits`` keeps the per-token (sid, logits) trail the parity
+    tests diff against the dense reference.  It costs a full-logits host
+    sync per step and grows without bound, so benchmarks and examples turn
+    it off; with it off the only per-step host transfer is the argmax token
+    ids.
     """
 
     def __init__(self, cfg, model, params, *, n_pages: int = 64,
                  page_size: int = 8, kernel_mode: str = "auto",
-                 spool_dir: Optional[str] = None, mgr=None):
+                 spool_dir: Optional[str] = None, mgr=None,
+                 trace_logits: bool = True):
         import jax.numpy as jnp
         self.cfg = cfg
         self.model = model
@@ -169,11 +194,12 @@ class RealBackend(Backend):
         self.n_pages = n_pages
         self.page_size = page_size
         self.kernel_mode = kernel_mode
+        self.trace_logits = trace_logits
         self.dtype = jnp.dtype(cfg.dtype)
         L, Hkv, D = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
-        shape = (n_pages, page_size, Hkv, D)
-        self.k_pools = [jnp.zeros(shape, self.dtype) for _ in range(L)]
-        self.v_pools = [jnp.zeros(shape, self.dtype) for _ in range(L)]
+        shape = (L, n_pages + 1, page_size, Hkv, D)
+        self.k_pool = jnp.zeros(shape, self.dtype)
+        self.v_pool = jnp.zeros(shape, self.dtype)
         self.alloc: List[PagedAllocator] = [
             PagedAllocator(n_pages, page_size) for _ in range(L)]
         self.host: Dict[Tuple[str, int], dict] = {}   # (sid, layer) -> k/v np
@@ -187,9 +213,12 @@ class RealBackend(Backend):
         self.stats = dict(prefills=0, decode_steps=0, swaps_out=0,
                           swaps_in=0, layer_evictions=0, layer_promotions=0,
                           migrations_in=0, copied_bytes=0.0, disk_writes=0)
-        # per-generated-token (sid, logits) trail — parity tests compare it
-        # against the dense reference; negligible at serving-test scale
         self.logit_trace: List[Tuple[str, np.ndarray]] = []
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Distinct XLA compilations of the fused serving steps (at most one
+        per shape bucket; shared across backends serving the same model)."""
+        return self.model.paged_compile_counts()
 
     def attach(self, mgr) -> None:
         """Bidirectional wiring: manager promote/evict trigger real copies."""
@@ -243,31 +272,76 @@ class RealBackend(Backend):
         return pages[pos // self.page_size], \
             np.asarray(pos % self.page_size, np.int32)
 
-    def _gather_np(self, layer: int, sid: str, n_tokens: int) -> dict:
-        """Copy one (sid, layer)'s KV out of the pools into host numpy."""
+    def _gather_layers(self, sid: str, layers: List[int]
+                       ) -> Dict[int, dict]:
+        """Copy many (sid, layer) KV slices out of the stacked pool with ONE
+        device->host transfer per side, sliced on device to the valid token
+        range (padding bytes never cross the bus or count in stats)."""
+        import jax.numpy as jnp
         c = self.cfg
-        pages = np.asarray(self.alloc[layer].seqs[sid].pages, np.int32)
-        k = np.asarray(self.k_pools[layer][pages]).reshape(
-            -1, c.n_kv_heads, c.d_head)[:n_tokens].copy()
-        v = np.asarray(self.v_pools[layer][pages]).reshape(
-            -1, c.n_kv_heads, c.d_head)[:n_tokens].copy()
-        self.stats["copied_bytes"] += k.nbytes + v.nbytes
-        return dict(k=k, v=v, n_tokens=n_tokens)
+        out: Dict[int, dict] = {}
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for l in layers:
+            s = self.alloc[l].seqs[sid]
+            groups.setdefault((s.n_tokens, len(s.pages)), []).append(l)
+        for (n, npg), ls in groups.items():
+            if npg == 0:
+                empty = np.zeros((0, c.n_kv_heads, c.d_head), self.dtype)
+                for l in ls:
+                    out[l] = dict(k=empty, v=empty, n_tokens=n)
+                continue
+            li = jnp.asarray(ls, jnp.int32)[:, None]
+            pi = jnp.asarray(np.stack(
+                [self.alloc[l].seqs[sid].pages for l in ls]), jnp.int32)
+            k = np.asarray(self.k_pool[li, pi].reshape(
+                len(ls), npg * self.page_size, c.n_kv_heads, c.d_head)[:, :n])
+            v = np.asarray(self.v_pool[li, pi].reshape(
+                len(ls), npg * self.page_size, c.n_kv_heads, c.d_head)[:, :n])
+            self.stats["copied_bytes"] += k.nbytes + v.nbytes
+            for i, l in enumerate(ls):
+                out[l] = dict(k=k[i], v=v[i], n_tokens=n)
+        return out
+
+    def _gather_np(self, layer: int, sid: str, n_tokens: int) -> dict:
+        """Copy one (sid, layer)'s valid KV out of the pool into host numpy.
+        Only whole-allocation gathers exist; a truncated-copy caller would
+        silently get the full range, so reject the mismatch loudly."""
+        assert n_tokens == self.alloc[layer].seqs[sid].n_tokens, \
+            (sid, layer, n_tokens)
+        return self._gather_layers(sid, [layer])[layer]
+
+    def _scatter_layers(self, sid: str, payloads: Dict[int, dict]) -> None:
+        """Allocate + copy many host-tier layers back into the stacked pool
+        with one host->device transfer per side.  All-or-nothing: if any
+        layer's pages don't fit, no allocator is touched (OutOfPages)."""
+        import jax.numpy as jnp
+        for l, p in payloads.items():
+            a = self.alloc[l]
+            need = a.pages_for(p["n_tokens"])
+            if need > len(a.free_list):
+                raise OutOfPages(f"{sid} layer {l}: need {need} pages, "
+                                 f"have {len(a.free_list)}")
+        for l, p in payloads.items():
+            self.alloc[l].allocate(sid, p["n_tokens"])
+        groups: Dict[int, List[int]] = {}
+        for l, p in payloads.items():
+            if p["n_tokens"] > 0:
+                groups.setdefault(p["n_tokens"], []).append(l)
+        for n, ls in groups.items():
+            pg, off = (np.stack(x) for x in
+                       zip(*(self._slots(l, sid, 0, n) for l in ls)))
+            li = jnp.asarray(ls, jnp.int32)[:, None]
+            ks = jnp.asarray(np.stack([payloads[l]["k"] for l in ls]),
+                             self.dtype)
+            vs = jnp.asarray(np.stack([payloads[l]["v"] for l in ls]),
+                             self.dtype)
+            self.k_pool = self.k_pool.at[li, pg, off].set(ks)
+            self.v_pool = self.v_pool.at[li, pg, off].set(vs)
+            self.stats["copied_bytes"] += ks.nbytes + vs.nbytes
 
     def _scatter_from_np(self, layer: int, sid: str, payload: dict) -> None:
-        """allocate + copy a host-tier layer back into the pools."""
-        import jax.numpy as jnp
-        n = payload["n_tokens"]
-        self.alloc[layer].allocate(sid, n)
-        if n == 0:
-            return
-        pg, off = self._slots(layer, sid, 0, n)
-        self.k_pools[layer] = self.k_pools[layer].at[pg, off].set(
-            jnp.asarray(payload["k"], self.dtype))
-        self.v_pools[layer] = self.v_pools[layer].at[pg, off].set(
-            jnp.asarray(payload["v"], self.dtype))
-        self.stats["copied_bytes"] += payload["k"].nbytes \
-            + payload["v"].nbytes
+        """allocate + copy one host-tier layer back into the pool."""
+        self._scatter_layers(sid, {layer: payload})
 
     def _extend_all(self, sid: str, n: int) -> None:
         """Grow every layer's allocation by n tokens, all-or-nothing."""
@@ -288,28 +362,45 @@ class RealBackend(Backend):
         return self.mgr.store.entries.get(sid)
 
     def _ensure_resident(self, sid: str) -> None:
-        """Swap in any host/disk-staged layers; allocate missing ones."""
-        for l in range(self.cfg.n_layers):
-            if sid in self.alloc[l].seqs:
-                continue
+        """Swap in any host/disk-staged layers (all in one batched copy);
+        allocate missing ones."""
+        missing = [l for l in range(self.cfg.n_layers)
+                   if sid not in self.alloc[l].seqs]
+        if not missing:
+            return
+        payloads: Dict[int, dict] = {}
+        z = None
+        for l in missing:
             payload = self.host.get((sid, l))
             if payload is None and self.spool:
                 f = self.spool / f"{sid}.npz"
-                if f.exists():
+                if z is None and f.exists():
                     z = np.load(f)
+                if z is not None:
                     payload = dict(k=z[f"k{l}"], v=z[f"v{l}"],
                                    n_tokens=int(z["n_tokens"]))
-            if payload is None:
-                self.alloc[l].allocate(sid, 0)
-            else:
-                # scatter first (may raise OutOfPages), only then drop the
-                # host copy — a failed swap-in must not lose the KV
-                self._scatter_from_np(l, sid, payload)
+            if payload is not None:
+                payloads[l] = payload
+        def _store_to_hbm(ls):
+            e = self._store_entry(sid)
+            if e is None:
+                return
+            for l in ls:
+                if l < e.n_layers and e.tier[l] != HBM:
+                    self.mgr.store.move_layer(sid, l, HBM)
+
+        empty = [l for l in missing if l not in payloads]
+        for l in empty:
+            self.alloc[l].allocate(sid, 0)
+        _store_to_hbm(empty)
+        if payloads:
+            # scatter first (may raise OutOfPages, touching nothing), only
+            # then drop the host copies — a failed swap-in must not lose KV
+            self._scatter_layers(sid, payloads)
+            for l in payloads:
                 self.host.pop((sid, l), None)
                 self.stats["swaps_in"] += 1
-            e = self._store_entry(sid)
-            if e is not None and l < e.n_layers and e.tier[l] != HBM:
-                self.mgr.store.move_layer(sid, l, HBM)
+            _store_to_hbm(payloads)
 
     # -- engine iteration ---------------------------------------------------
 
@@ -337,20 +428,30 @@ class RealBackend(Backend):
             raise ValueError(f"{sid}: prefill with no tokens to process")
         n_cached = st.n_kv
         self._extend_all(sid, len(ids))
-        tables, pg, off = [], [], []
-        for l in range(self.cfg.n_layers):
-            tables.append(jnp.asarray(self.alloc[l].block_table(sid),
-                                      jnp.int32))
-            p, o = self._slots(l, sid, n_cached, len(ids))
-            pg.append(p)
-            off.append(o)
-        logits, self.k_pools, self.v_pools = self.model.prefill_paged(
-            self.params, ids, self.k_pools, self.v_pools, tables, pg, off,
-            n_cached, kernel_mode=self.kernel_mode)
-        st.n_kv += len(ids)
-        lg = np.asarray(logits[:self.cfg.vocab])
-        self.logit_trace.append((sid, lg))
-        tok = int(np.argmax(lg))
+        L = self.cfg.n_layers
+        Sq = len(ids)
+        Sqb = _bucket(Sq, 8)                     # new-token shape bucket
+        Tb = _bucket(max(len(self.alloc[l].seqs[sid].pages)
+                         for l in range(L)))     # table-width bucket
+        ids_p = np.zeros((Sqb,), np.int32)
+        ids_p[:Sq] = ids
+        tables = np.stack([self.alloc[l].block_table(sid, Tb)
+                           for l in range(L)])
+        # padded lanes scatter into the trash page (index n_pages)
+        pg = np.full((L, Sqb), self.n_pages, np.int32)
+        off = np.zeros((L, Sqb), np.int32)
+        for l in range(L):
+            p, o = self._slots(l, sid, n_cached, Sq)
+            pg[l, :Sq] = p
+            off[l, :Sq] = o
+        tok, logits, self.k_pool, self.v_pool = self.model.prefill_paged(
+            self.params, ids_p, self.k_pool, self.v_pool, tables, pg, off,
+            jnp.int32(n_cached), jnp.int32(Sq), kernel_mode=self.kernel_mode)
+        st.n_kv += Sq
+        if self.trace_logits:
+            self.logit_trace.append(
+                (sid, np.asarray(logits[:self.cfg.vocab])))
+        tok = int(tok)
         st.last_token = tok
         req.output_ids.append(tok)
         self.stats["prefills"] += 1
@@ -358,7 +459,6 @@ class RealBackend(Backend):
         return PrefillResult(t1 - t0, stall=t_resident - t0)
 
     def decode(self, running, now) -> float:
-        import jax.numpy as jnp
         t0 = time.perf_counter()
         sids = [r.req.session_id for r in running]
         for sid in sids:
@@ -372,24 +472,37 @@ class RealBackend(Backend):
                 raise OutOfPages(f"decode: need {need} pages, have {free}")
         for sid in sids:
             self._extend_all(sid, 1)
-        toks = [self.seqs[s].last_token for s in sids]
-        ctx = jnp.asarray(self.alloc[0].ctx_lens(sids))   # incl. pending
-        tables, pg, off = [], [], []
-        for l in range(self.cfg.n_layers):
-            tables.append(jnp.asarray(self.alloc[l].batch_block_tables(sids)))
+        L = self.cfg.n_layers
+        B = len(sids)
+        Bb = _bucket(B)                          # batch shape bucket
+        Tb = _bucket(max(len(self.alloc[l].seqs[s].pages)
+                         for l in range(L) for s in sids))
+        toks = np.zeros((Bb,), np.int32)
+        toks[:B] = [self.seqs[s].last_token for s in sids]
+        ctx = np.zeros((Bb,), np.int32)          # padded rows: ctx 0 -> masked
+        ctx[:B] = self.alloc[0].ctx_lens(sids)   # incl. pending
+        tables = np.zeros((L, Bb, Tb), np.int32)
+        pg = np.full((L, Bb), self.n_pages, np.int32)   # padded -> trash page
+        off = np.zeros((L, Bb), np.int32)
+        for l in range(L):
+            tables[l, :B] = self.alloc[l].batch_block_tables(sids, Tb)
             p, o = zip(*(self._slots(l, s, self.seqs[s].n_kv, 1)
                          for s in sids))
-            pg.append(np.concatenate(p))
-            off.append(np.concatenate(o))
-        logits, self.k_pools, self.v_pools = self.model.decode_paged(
-            self.params, toks, self.k_pools, self.v_pools, tables, ctx,
+            pg[l, :B] = np.concatenate(p)
+            off[l, :B] = np.concatenate(o)
+        toks_dev, logits, self.k_pool, self.v_pool = self.model.decode_paged(
+            self.params, toks, self.k_pool, self.v_pool, tables, ctx,
             pg, off, kernel_mode=self.kernel_mode)
-        logits = np.asarray(logits[:, :self.cfg.vocab])
+        tok_np = np.asarray(toks_dev[:B])        # token ids only — no full-
+        lg_np = None                             # logits sync unless tracing
+        if self.trace_logits:
+            lg_np = np.asarray(logits[:B, :self.cfg.vocab])
         for i, sid in enumerate(sids):
             st = self.seqs[sid]
             st.n_kv += 1
-            self.logit_trace.append((sid, logits[i]))
-            tok = int(np.argmax(logits[i]))
+            if lg_np is not None:
+                self.logit_trace.append((sid, lg_np[i]))
+            tok = int(tok_np[i])
             st.last_token = tok
             running[i].req.output_ids.append(tok)
         self.stats["decode_steps"] += 1
@@ -398,17 +511,17 @@ class RealBackend(Backend):
     # -- preemption / lifecycle ---------------------------------------------
 
     def swap_out(self, sid: str, n_tokens: int) -> None:
-        """Copy every resident layer to the host tier and free its pages."""
+        """Copy every resident layer to the host tier (one batched
+        device->host transfer across all L layers) and free its pages."""
         st = self.seqs.get(sid)
         if st is None:
             return
-        for l in range(self.cfg.n_layers):
-            a = self.alloc[l]
-            if sid not in a.seqs:
-                continue                      # layer already evicted to host
-            n = a.seqs[sid].n_tokens
-            self.host[(sid, l)] = self._gather_np(l, sid, n)
-            a.free(sid)
+        resident = [l for l in range(self.cfg.n_layers)
+                    if sid in self.alloc[l].seqs]
+        payloads = self._gather_layers(sid, resident)
+        for l in resident:
+            self.host[(sid, l)] = payloads[l]
+            self.alloc[l].free(sid)
         e = self._store_entry(sid)
         if e is not None:
             e.pinned = False         # preempted: fair game for migration
@@ -469,22 +582,28 @@ class RealBackend(Backend):
         if self.spool is None or sid not in self.seqs:
             return False
         st = self.seqs[sid]
+        resident, staged = [], []
+        for l in range(self.cfg.n_layers):
+            if sid in self.alloc[l].seqs:
+                resident.append(l)
+            elif (sid, l) in self.host:
+                staged.append(l)
+            else:
+                return False               # a layer is unreachable: no copy
         # the pending token has no KV anywhere — it must ride along in the
         # spool or a post-crash recovery cannot resume the sequence
         arrs = dict(n_tokens=np.int64(0),
                     last_token=np.int64(-1 if st.last_token is None
                                         else st.last_token),
                     priority=np.int64(st.priority))
-        for l in range(self.cfg.n_layers):
-            if sid in self.alloc[l].seqs:
-                p = self._gather_np(l, sid, self.alloc[l].seqs[sid].n_tokens)
-            elif (sid, l) in self.host:
-                p = self.host[(sid, l)]
-            else:
-                return False
+        payloads = self._gather_layers(sid, resident)  # one batched copy
+        payloads.update({l: self.host[(sid, l)] for l in staged})
+        ns = {p["n_tokens"] for p in payloads.values()}
+        assert len(ns) == 1, f"{sid}: per-layer n_tokens diverge: {ns}"
+        arrs["n_tokens"] = np.int64(ns.pop())
+        for l, p in payloads.items():
             arrs[f"k{l}"] = p["k"]
             arrs[f"v{l}"] = p["v"]
-            arrs["n_tokens"] = np.int64(p["n_tokens"])
         np.savez(self.spool / f"{sid}.npz", **arrs)
         self.stats["disk_writes"] += 1
         return True

@@ -119,9 +119,17 @@ class NodeEngine:
             if req.first_token_at is None:
                 req.first_token_at = now + dt
             req.generated = 1
-            self.running.append(Running(
-                req, req.cached_tokens + req.prompt_tokens + 1,
-                req.max_new_tokens - 1))
+            run = Running(req, req.cached_tokens + req.prompt_tokens + 1,
+                          req.max_new_tokens - 1)
+            if run.remaining <= 0:
+                # prefill emitted the request's only remaining token
+                # (max_new_tokens == 1, e.g. resumed after a preemption at
+                # one-to-go): complete now — a decode here would overshoot
+                req.finished_at = now + dt
+                self.completed.append(req)
+                self.backend.finish(req, now + dt)
+            else:
+                self.running.append(run)
 
         # 2) one decode iteration for the whole batch
         d = self._decode_with_pressure(now + dt) if self.running else None

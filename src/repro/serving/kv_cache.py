@@ -108,8 +108,12 @@ class PagedAllocator:
         out[:len(s.pages)] = s.pages
         return out
 
-    def batch_block_tables(self, seq_ids: List[str]) -> np.ndarray:
-        width = max((len(self.seqs[s].pages) for s in seq_ids), default=1)
+    def batch_block_tables(self, seq_ids: List[str],
+                           max_pages: Optional[int] = None) -> np.ndarray:
+        """Stacked padded tables; ``max_pages`` pins the width so bucketed
+        dispatch can hold the kernel shape constant across batches."""
+        width = max_pages or max((len(self.seqs[s].pages)
+                                  for s in seq_ids), default=1)
         return np.stack([self.block_table(s, width) for s in seq_ids])
 
     def ctx_lens(self, seq_ids: List[str]) -> np.ndarray:

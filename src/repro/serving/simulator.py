@@ -129,7 +129,8 @@ class ClusterRuntime:
                  advisory_to_hbm: bool = True, mode: str = "sim",
                  model=None, params=None, n_pages: int = 64,
                  page_size: int = 8, kernel_mode: str = "auto",
-                 spool_root: Optional[str] = None):
+                 spool_root: Optional[str] = None,
+                 trace_logits: bool = True):
         if mode not in ("sim", "real"):
             raise ValueError(f"unknown mode {mode!r} (sim|real)")
         self.cfg = cfg
@@ -161,7 +162,7 @@ class ClusterRuntime:
                 self.backends[i] = RealBackend(
                     cfg, model, params, n_pages=n_pages,
                     page_size=page_size, kernel_mode=kernel_mode,
-                    mgr=self.managers[i],
+                    mgr=self.managers[i], trace_logits=trace_logits,
                     spool_dir=str(self.spool_root / f"node{i}"))
 
         from repro.serving.engine import NodeEngine
