@@ -1,11 +1,79 @@
 """Benchmark entrypoint: one function per paper table/figure + the roofline
 table.  Prints ``name,us_per_call,derived`` CSV (ratios/fractions are scaled
-by 1e6 into the us column; the derived field says what they mean)."""
+by 1e6 into the us column; the derived field says what they mean).
+
+``--serving`` aggregates the two serving artifacts
+(results/bench/BENCH_step.json + BENCH_cluster.json) into the top-level
+``results/bench/BENCH_serving.json`` scorecard: steady-state TBT
+median/p99, the long-prompt-interference TBT bound, cluster throughput,
+compile counts, and copied bytes — the one file CI uploads and gates
+(decode-p99-under-interference must not regress vs the committed copy)."""
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def aggregate_serving() -> dict:
+    """Fold BENCH_step.json + BENCH_cluster.json into BENCH_serving.json.
+    Both inputs must already exist (CI's earlier steps emit them)."""
+    from benchmarks.common import RESULTS, save
+
+    step_f = RESULTS / "BENCH_step.json"
+    cluster_f = RESULTS / "BENCH_cluster.json"
+    for f in (step_f, cluster_f):
+        if not f.exists():
+            raise SystemExit(
+                f"{f} missing — run `python -m benchmarks.kernel_bench "
+                f"--step` and `python -m benchmarks.fig_serving --cluster` "
+                f"first")
+    step = json.loads(step_f.read_text())
+    cluster = json.loads(cluster_f.read_text())
+
+    cfgs = list(step["configs"].values())
+    medians = sorted(c["decode_ms_median"] for c in cfgs
+                     if c.get("decode_ms_median") is not None)
+    p90s = sorted(c["decode_ms_p90"] for c in cfgs
+                  if c.get("decode_ms_p90") is not None)
+    inter = step.get("interference", {})
+    sym = cluster.get("symphony", {})
+    per_node = sym.get("per_node", {})
+    out = dict(
+        steady=dict(
+            decode_ms_median=(medians[len(medians) // 2] if medians
+                              else None),
+            decode_ms_p90_worst=(p90s[-1] if p90s else None),
+            steady_steps=sum(c.get("steady_steps", 0) for c in cfgs),
+            compile_steps=sum(c.get("compile_steps", 0) for c in cfgs),
+        ),
+        interference=dict(
+            tbt_median_ms=inter.get("tbt_median_ms"),
+            tbt_p99_ms=inter.get("tbt_p99_ms"),
+            steady_median_ms=inter.get("steady_median_ms"),
+            steady_p99_ms=inter.get("steady_p99_ms"),
+            tbt_median_over_steady=inter.get("tbt_median_over_steady"),
+            tbt_p99_over_steady_p99=inter.get("tbt_p99_over_steady_p99"),
+            interference_compiles=inter.get("interference_compiles"),
+            token_budget=inter.get("token_budget"),
+            prompt_len=inter.get("prompt_len"),
+        ),
+        cluster=dict(
+            throughput_rps=sym.get("throughput_rps"),
+            ttft_mean_s=sym.get("ttft_mean_s"),
+            ttft_p99_s=sym.get("ttft_p99_s"),
+            tpot_mean_s=sym.get("tpot_mean_s"),
+            stall_s=sum(n.get("stall_s", 0.0) for n in per_node.values()),
+            preemptions=sum(n.get("preemptions", 0)
+                            for n in per_node.values()),
+        ),
+        compile_counts=step.get("compile_counts", {}),
+        copied_bytes=sum(c.get("copied_bytes", 0.0) for c in cfgs),
+    )
+    save("BENCH_serving", out)
+    print(json.dumps(out, indent=1))
+    return out
 
 
 def main() -> None:
@@ -13,7 +81,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweeps (slow)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--serving", action="store_true",
+                    help="aggregate BENCH_step + BENCH_cluster into "
+                         "BENCH_serving.json and exit")
     args = ap.parse_args()
+    if args.serving:
+        aggregate_serving()
+        return
 
     from benchmarks import fig_serving, fig_tokens
     from benchmarks.roofline_table import emit_roofline

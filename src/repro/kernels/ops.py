@@ -15,6 +15,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill as _flash
 from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.paged_attention import paged_chunk_attention as _chunk
 
 
 def _on_tpu() -> bool:
@@ -45,6 +46,20 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     interpret = not _on_tpu() if mode == "auto" else (mode == "interpret")
     return _paged(q, k_pages, v_pages, block_tables, ctx_lens,
                   interpret=interpret)
+
+
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, q_offsets,
+                          ctx_lens, mode: str = "auto", bq=None):
+    """Unified mixed-batch serving attention (decode = 1-token chunk).
+    mode: auto | pallas | interpret | ref"""
+    if mode == "ref":
+        return ref.paged_chunk_attention_ref(q, k_pages, v_pages,
+                                             block_tables, q_offsets,
+                                             ctx_lens)
+    interpret = not _on_tpu() if mode == "auto" else (mode == "interpret")
+    bq = _auto_tile(q.shape[1]) if bq is None else bq
+    return _chunk(q, k_pages, v_pages, block_tables, q_offsets, ctx_lens,
+                  bq=bq, interpret=interpret)
 
 
 def flash_prefill(q, k, v, q_offset=0, mode: str = "auto",

@@ -1,4 +1,15 @@
-"""Paged decode attention — Pallas TPU kernel with block-table indirection.
+"""Paged attention — Pallas TPU kernels with block-table indirection.
+
+Two kernels share the flash-decoding structure (page dimension innermost,
+running (m, l, acc) accumulators in VMEM scratch, scalar-prefetch block
+tables):
+
+* ``paged_attention`` — the single-token decode kernel (one query row per
+  lane), kept as the minimal reference shape;
+* ``paged_chunk_attention`` — the unified mixed-batch kernel the serving
+  step dispatches: every lane carries a CHUNK of queries at a per-lane
+  ``q_offset`` (decode lanes are the one-token chunk), so one dispatch
+  covers chunked prefill and batched decode together.
 
 The page pool lives in HBM; the grid walks (batch, kv_head, page) with the
 page dimension innermost (sequential on a TPU core).  Block tables and
@@ -78,6 +89,118 @@ def _kernel(ctx_ref, tables_ref,          # scalar prefetch (SMEM)
     def _finish():
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
                        ).astype(o_ref.dtype)
+
+
+def _chunk_kernel(qoff_ref, ctx_ref, tables_ref,   # scalar prefetch (SMEM)
+                  q_ref, k_ref, v_ref,             # VMEM blocks
+                  o_ref,                           # output block
+                  m_ref, l_ref, acc_ref,           # VMEM scratch
+                  *, bq: int, G: int):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    p = pl.program_id(3)
+    n_pages = pl.num_programs(3)
+    page = k_ref.shape[1]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[b]
+    qoff = qoff_ref[b]
+    start = p * page
+    # a page is relevant iff it begins before BOTH the lane's context end and
+    # this q block's causal horizon; ctx = 0 (padded lane) skips every page,
+    # so the lane finishes as zeros without reading anyone's KV
+    q_hi = qoff + (qi + 1) * bq - 1
+    valid = jnp.minimum(ctx, q_hi + 1) - start
+
+    @pl.when(valid > 0)
+    def _compute():
+        q = q_ref[0, 0].reshape(bq * G, -1).astype(jnp.float32)
+        k = k_ref[0, :, 0].astype(jnp.float32)             # (page, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s / np.sqrt(q.shape[-1])                       # (bq*G, page)
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = qoff + qi * bq + rows
+        kpos = start + cols
+        s = jnp.where((qpos >= kpos) & (kpos < ctx), s, -1e30)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * corr + pexp.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.reshape(bq, G, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, q_offsets,
+                          ctx_lens, *, bq: int = 128,
+                          interpret: bool = True):
+    """Mixed-batch paged attention: every lane carries a chunk of queries.
+
+    q: (B, Sq, H, D); k/v_pages: (P, page, Hkv, D); block_tables: (B, maxp);
+    q_offsets/ctx_lens: (B,) int32.  Lane b's query token i sits at absolute
+    position q_offsets[b] + i and attends KV positions <= it (causal) that
+    are < ctx_lens[b].  Decode is the Sq = 1 special case (q_offset =
+    ctx - 1); chunked prefill sets q_offset = n_cached.  ctx_len = 0 masks a
+    padded lane entirely (finishes as zeros, no KV read); padded query rows
+    of a live lane (i >= its chunk length) produce garbage the caller never
+    reads.  Returns (B, Sq, H, D).
+
+    Grid: (B, Hkv, q_blocks, pages), page innermost with running (m, l, acc)
+    flash accumulators in VMEM scratch; q_offsets/ctx_lens/tables are traced
+    scalar-prefetch data, so one compiled kernel serves every (chunk length,
+    context length) mix that pads into the same (B, Sq, maxp) bucket."""
+    B, Sq, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    maxp = block_tables.shape[1]
+    bq = min(bq, Sq)
+    assert Sq % bq == 0
+    q5 = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+
+    grid = (B, Hkv, Sq // bq, maxp)
+    kern = functools.partial(_chunk_kernel, bq=bq, G=G)
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, D),
+        lambda b, h, qi, p, qo, ctx, tab: (tab[b, p], 0, h, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, G, D),
+                         lambda b, h, qi, p, qo, ctx, tab: (b, h, qi, 0, 0)),
+            kv_spec, kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, G, D),
+                               lambda b, h, qi, p, qo, ctx, tab:
+                               (b, h, qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq, G, D), q.dtype),
+        interpret=interpret,
+    )(q_offsets, ctx_lens, block_tables, q5, k_pages, v_pages)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, D)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -34,6 +34,40 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens):
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables,
+                              q_offsets, ctx_lens):
+    """Mixed-batch paged attention: each lane is a chunk of queries.
+
+    q:            (B, Sq, H, D) — lane b's token i at position q_offsets[b]+i
+    k/v_pages:    (P, page_size, Hkv, D)
+    block_tables: (B, max_pages) int32
+    q_offsets:    (B,) int32 — cached context before the chunk
+    ctx_lens:     (B,) int32 — total valid KV incl. the chunk (0 = padded
+                  lane, output zeroed to match the kernel's page skip)
+    returns:      (B, Sq, H, D)
+    """
+    B, Sq, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    maxp = block_tables.shape[1]
+    S = maxp * page
+
+    k = k_pages[block_tables].reshape(B, S, Hkv, D)
+    v = v_pages[block_tables].reshape(B, S, Hkv, D)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    qpos = q_offsets[:, None] + jnp.arange(Sq)[None, :]          # (B, Sq)
+    kpos = jnp.arange(S)
+    mask = (qpos[:, :, None] >= kpos[None, None, :]) \
+        & (kpos[None, None, :] < ctx_lens[:, None, None])
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    o = jnp.where(ctx_lens[:, None, None, None, None] > 0, o, 0.0)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
 def flash_prefill_ref(q, k, v, q_offset=0):
     """Causal attention with cached prefix.
 

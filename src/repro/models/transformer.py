@@ -23,13 +23,12 @@ class DenseLM:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.dtype)
-        # fused paged serving steps, jitted lazily.  jit compiles exactly
+        # fused paged serving step, jitted lazily.  jit compiles exactly
         # once per distinct (arg shapes/dtypes, static kwargs) signature, so
         # recording the signatures we dispatch gives an exact compile census
         # without reaching into jit internals (see paged_compile_counts)
-        self._prefill_jit = None
-        self._decode_jit = None
-        self._compile_keys = dict(prefill=set(), decode=set())
+        self._step_jit = None
+        self._compile_keys = dict(step=set())
 
     # -- parameters ---------------------------------------------------------
 
@@ -226,144 +225,101 @@ class DenseLM:
         logits = self._unembed(params, x[:, 0])
         return logits, dict(k=ks, v=vs, len=clen + 1)
 
-    # -- paged entry points (RealBackend serving path) ------------------------
+    # -- paged entry point (RealBackend serving path) -------------------------
     #
     # Same math as prefill()/decode_step(), but the KV lives in ONE stacked
     # physical page pool (L, P, page, Hkv, D) addressed through block
     # tables — the layout the SYMPHONY node manager migrates between tiers,
     # and the layout that lets tier transfers move all L layers in a single
-    # device<->host copy.  The layer stack is a `jax.lax.scan` over the
-    # already-stacked block weights with the KV scatter, the attention
-    # kernel, and the FFN inside the scanned body: one fused dispatch per
-    # serving step instead of n_layers separate scatters and kernel calls.
+    # device<->host copy.  There is ONE entry point, `step_paged`: a MIXED
+    # batch where every lane carries a (q_len, ctx_len) pair — decode lanes
+    # are the q_len = 1 special case, chunked-prefill lanes carry this
+    # step's slice of new prompt tokens — so one engine iteration is one
+    # fused dispatch regardless of its prefill/decode composition.  The
+    # layer stack is a `jax.lax.scan` over the already-stacked block weights
+    # with the KV scatter, the unified paged_chunk_attention kernel, and the
+    # FFN inside the scanned body.
     #
-    # Every data-dependent quantity (n_cached, n_valid, ctx_lens) is traced,
-    # so the jit cache is keyed only on the SHAPE BUCKET (padded Sq, table
-    # width, padded batch) the backend dispatches into — steady-state serving
-    # is recompile-free.  Padded token lanes scatter their KV into a caller-
-    # supplied trash slot and their outputs are never read (attention rows
-    # are independent, the FFN is position-wise, and logits/argmax are taken
-    # at valid positions only).  The argmax stays on device so decode
-    # returns token ids without a full-logits host sync.
+    # Every data-dependent quantity (q_offsets, ctx_lens, last_idx) is
+    # traced, so the jit cache is keyed only on the SHAPE BUCKET (padded
+    # lanes x padded tokens-per-step x table width) the backend dispatches
+    # into — steady-state serving is recompile-free.  Padded token slots
+    # scatter their KV into a caller-supplied trash slot and their outputs
+    # are never read (attention rows are independent, the FFN is
+    # position-wise, and logits/argmax are taken at `last_idx` only); a
+    # padded lane sets ctx_len = 0 and is masked out of attention entirely.
+    # The argmax stays on device so the step returns token ids without a
+    # full-logits host sync.
 
-    def _paged_body(self, positions, ctx_lens=None, kernel_mode="auto",
-                    n_cached=None):
-        """Scanned per-layer body shared by prefill_paged/decode_paged."""
+    def _step_paged_impl(self, params, token_ids, k_pool, v_pool, tables,
+                         q_offsets, ctx_lens, last_idx, slot_pages,
+                         slot_offs, *, kernel_mode):
         from repro.kernels import ops
         c = self.cfg
+        ids = jnp.asarray(token_ids, jnp.int32)
+        x = self._embed(params, ids)
+        B, Sq = ids.shape
+        positions = q_offsets[:, None] + jnp.arange(Sq)[None, :]
 
         def body(x, xs):
             w, kp, vp, table, sp, so = xs
-            B, S, _ = x.shape
             h = L.rms_norm(x, w["ln1"], c.norm_eps)
-            q = (h @ w["wq"]).reshape(B, S, c.n_heads, c.d_head)
-            k = (h @ w["wk"]).reshape(B, S, c.n_kv_heads, c.d_head)
-            v = (h @ w["wv"]).reshape(B, S, c.n_kv_heads, c.d_head)
+            q = (h @ w["wq"]).reshape(B, Sq, c.n_heads, c.d_head)
+            k = (h @ w["wk"]).reshape(B, Sq, c.n_kv_heads, c.d_head)
+            v = (h @ w["wv"]).reshape(B, Sq, c.n_kv_heads, c.d_head)
             if c.qk_norm:
                 q = L.rms_norm(q, w["qn"], c.norm_eps)
                 k = L.rms_norm(k, w["kn"], c.norm_eps)
             q = L.apply_rope(q, positions, c.rope_theta)
             k = L.apply_rope(k, positions, c.rope_theta)
-            if ctx_lens is None:               # prefill: one sequence
-                kp = kp.at[sp, so].set(k[0].astype(kp.dtype))
-                vp = vp.at[sp, so].set(v[0].astype(vp.dtype))
-                Hkv, D = kp.shape[2], kp.shape[3]
-                kd = kp[table].reshape(-1, Hkv, D)[None]
-                vd = vp[table].reshape(-1, Hkv, D)[None]
-                o = ops.flash_prefill(q, kd, vd, n_cached, mode=kernel_mode)
-            else:                              # decode: one token per row
-                kp = kp.at[sp, so].set(k[:, 0].astype(kp.dtype))
-                vp = vp.at[sp, so].set(v[:, 0].astype(vp.dtype))
-                o = ops.paged_attention(q[:, 0], kp, vp, table, ctx_lens,
-                                        mode=kernel_mode)[:, None]
-            x = x + o.reshape(B, S, -1) @ w["wo"]
+            kp = kp.at[sp, so].set(k.astype(kp.dtype))
+            vp = vp.at[sp, so].set(v.astype(vp.dtype))
+            o = ops.paged_chunk_attention(q, kp, vp, table, q_offsets,
+                                          ctx_lens, mode=kernel_mode)
+            x = x + o.reshape(B, Sq, -1) @ w["wo"]
             h2 = L.rms_norm(x, w["ln2"], c.norm_eps)
             x = x + L.swiglu(h2, w["w1"], w["w3"], w["w2"])
             return x, (kp, vp)
 
-        return body
-
-    def _prefill_paged_impl(self, params, token_ids, k_pool, v_pool, tables,
-                            slot_pages, slot_offs, n_cached, n_valid,
-                            *, kernel_mode):
-        c = self.cfg
-        ids = jnp.asarray(token_ids, jnp.int32)[None]
-        x = self._embed(params, ids)
-        Sq = x.shape[1]
-        positions = n_cached + jnp.arange(Sq)[None, :]
-        body = self._paged_body(positions, kernel_mode=kernel_mode,
-                                n_cached=n_cached)
         x, (k_pool, v_pool) = jax.lax.scan(
             body, x, (params["blocks"], k_pool, v_pool, tables,
                       slot_pages, slot_offs))
         x = L.rms_norm(x, params["ln_f"], c.norm_eps)
-        logits = self._unembed(params, x[0, n_valid - 1])
-        tok = jnp.argmax(logits[:c.vocab]).astype(jnp.int32)
-        return tok, logits, k_pool, v_pool
-
-    def _decode_paged_impl(self, params, tokens, k_pool, v_pool, tables,
-                           ctx_lens, slot_pages, slot_offs, *, kernel_mode):
-        c = self.cfg
-        x = self._embed(params, jnp.asarray(tokens, jnp.int32)[:, None])
-        positions = (ctx_lens - 1)[:, None]
-        body = self._paged_body(positions, ctx_lens=ctx_lens,
-                                kernel_mode=kernel_mode)
-        x, (k_pool, v_pool) = jax.lax.scan(
-            body, x, (params["blocks"], k_pool, v_pool, tables,
-                      slot_pages, slot_offs))
-        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
-        logits = self._unembed(params, x[:, 0])
+        logits = self._unembed(params, x[jnp.arange(B), last_idx])
         toks = jnp.argmax(logits[:, :c.vocab], axis=-1).astype(jnp.int32)
         return toks, logits, k_pool, v_pool
 
-    def prefill_paged(self, params, token_ids, k_pool, v_pool, tables,
-                      slot_pages, slot_offs, n_cached, n_valid,
-                      kernel_mode: str = "auto"):
-        """Fused continuation prefill of ONE sequence against paged KV.
+    def step_paged(self, params, token_ids, k_pool, v_pool, tables,
+                   q_offsets, ctx_lens, last_idx, slot_pages, slot_offs,
+                   kernel_mode: str = "auto"):
+        """ONE fused mixed-batch serving iteration over paged KV.
 
-        token_ids: (Sq,) int32, bucket-padded; the first ``n_valid`` are the
-          real tokens of this turn (engine prepends the pending token); their
-          KV lands at absolute positions [n_cached, n_cached + n_valid).
+        token_ids: (B, Sq) int32, bucket-padded both ways.  Lane b's first
+          q_len[b] = ctx_lens[b] - q_offsets[b] slots are this step's real
+          tokens (a decode lane's pending token, or a chunk of prompt);
+          their KV lands at absolute positions [q_offsets[b], ctx_lens[b]).
         k_pool/v_pool: (L, P, page, Hkv, D) stacked pools.
-        tables: (L, T) int32 block tables covering the sequence (0-padded).
-        slot_pages/slot_offs: (L, Sq) destination of each token's KV; padded
-          lanes must point at a trash slot.
-        n_cached/n_valid: traced int32 scalars.
-        Returns (argmax token id (), logits (V,), k_pool, v_pool).
+        tables: (L, B, T) int32 block tables (0-padded).
+        q_offsets: (B,) traced int32 — tokens whose KV is already written.
+        ctx_lens: (B,) traced int32 — valid tokens incl. this step's chunk
+          (0 masks a padded lane out of attention entirely).
+        last_idx: (B,) traced int32 — index of the lane's last real token,
+          where logits/argmax are read (0 for padded lanes).
+        slot_pages/slot_offs: (L, B, Sq) destination of each token's KV;
+          padded slots must point at a trash slot.
+        Returns (argmax token ids (B,), logits (B, V), k_pool, v_pool).
         """
-        if self._prefill_jit is None:
+        if self._step_jit is None:
             # donate the pools: the backend unconditionally replaces its
             # references with the returned pools, and aliasing input to
             # output keeps peak memory at 1x the stacked pool per side
-            self._prefill_jit = jax.jit(self._prefill_paged_impl,
-                                        static_argnames=("kernel_mode",),
-                                        donate_argnums=(2, 3))
+            self._step_jit = jax.jit(self._step_paged_impl,
+                                     static_argnames=("kernel_mode",),
+                                     donate_argnums=(2, 3))
         args = (params, token_ids, k_pool, v_pool, tables,
-                slot_pages, slot_offs, n_cached, n_valid)
-        self._compile_keys["prefill"].add(self._shape_sig(args, kernel_mode))
-        return self._prefill_jit(*args, kernel_mode=kernel_mode)
-
-    def decode_paged(self, params, tokens, k_pool, v_pool, tables,
-                     ctx_lens, slot_pages, slot_offs,
-                     kernel_mode: str = "auto"):
-        """One fused batched decode iteration over paged KV.
-
-        tokens: (B,) bucket-padded pending tokens (KV not yet written).
-        k_pool/v_pool: (L, P, page, Hkv, D) stacked pools.
-        tables: (L, B, T) int32 (0-padded); ctx_lens: (B,) valid tokens
-        INCLUDING the pending token (0 for padded rows, which masks the whole
-        row out of attention); slot_pages/slot_offs: (L, B) destination of
-        the pending token's KV (trash slot for padded rows).
-        Returns (argmax token ids (B,), logits (B, V), k_pool, v_pool).
-        """
-        if self._decode_jit is None:
-            self._decode_jit = jax.jit(self._decode_paged_impl,
-                                       static_argnames=("kernel_mode",),
-                                       donate_argnums=(2, 3))
-        args = (params, tokens, k_pool, v_pool, tables,
-                ctx_lens, slot_pages, slot_offs)
-        self._compile_keys["decode"].add(self._shape_sig(args, kernel_mode))
-        return self._decode_jit(*args, kernel_mode=kernel_mode)
+                q_offsets, ctx_lens, last_idx, slot_pages, slot_offs)
+        self._compile_keys["step"].add(self._shape_sig(args, kernel_mode))
+        return self._step_jit(*args, kernel_mode=kernel_mode)
 
     @staticmethod
     def _shape_sig(args, kernel_mode: str):
@@ -374,8 +330,9 @@ class DenseLM:
             for a in jax.tree.leaves(args) if hasattr(a, "shape"))
 
     def paged_compile_counts(self) -> Dict[str, int]:
-        """Number of distinct XLA compilations of the fused serving steps
-        (one per shape bucket; the recompile-free invariant's observable)."""
+        """Number of distinct XLA compilations of the fused serving step
+        (one per (lanes, tokens-per-step, table width) shape bucket; the
+        recompile-free invariant's observable)."""
         return {k: len(v) for k, v in self._compile_keys.items()}
 
     # -- dry-run specs --------------------------------------------------------

@@ -1,8 +1,9 @@
 """Execution backends for the serving engine.
 
 One `Backend` protocol, two implementations, selected at engine
-construction — the engine's control flow (admission, continuation prefill,
-batched decode, cooperative purge, preemption) is identical in both modes:
+construction — the engine's control flow (token-budget admission, chunked
+continuation prefill, batched decode, cooperative purge, preemption) is
+identical in both modes:
 
 * `SimBackend` — every step charges CostModel seconds and no tensor moves.
   This is the discrete-event simulator's backend and reproduces the paper's
@@ -11,26 +12,31 @@ batched decode, cooperative purge, preemption) is identical in both modes:
   ((L, P+1, page, Hkv, D) jnp arrays standing in for HBM; page index P is a
   trash page for padded-lane scatter), plus a numpy host staging tier and an
   optional .npz disk spool, and executes one engine iteration as ONE fused,
-  recompile-free dispatch: the model scans the layer stack with KV scatter,
-  the `flash_prefill`/`paged_attention` Pallas kernels, and the FFN inside
-  the scanned body, and returns the argmax token id computed on device.
-  Dispatch is SHAPE-BUCKETED — new-token count, block-table width, and
-  decode batch are padded to power-of-two buckets, and everything
-  data-dependent (n_cached, n_valid, ctx_lens) is traced — so each fused
-  step compiles at most once per bucket instead of once per turn/context
-  length.  Tier transfers (swap/evict/promote/persist/export) ride the
-  stacked layout: all layers of a session move in one device<->host copy of
-  exactly the valid token range.  Per-layer `PagedAllocator`s remain the
-  placement bookkeeping (the paper's layer-granular tiering is untouched);
+  recompile-free dispatch: a MIXED batch where each lane carries
+  (q_len, ctx_len) — decode lanes are the q_len = 1 special case, prefill
+  lanes carry this step's chunk of new prompt tokens — through the model's
+  single `step_paged` `lax.scan` (KV scatter, the unified
+  `paged_chunk_attention` Pallas kernel, and the FFN inside the scanned
+  body), returning argmax token ids computed on device.  Dispatch is
+  SHAPE-BUCKETED — lane count, tokens-per-step, and block-table width are
+  padded to power-of-two buckets, and everything data-dependent
+  (q_offsets, ctx_lens, last_idx) is traced — so each fused step compiles
+  at most once per bucket instead of once per turn/context length.  Tier
+  transfers (swap/evict/promote/persist/export) ride the stacked layout:
+  all layers of a session move in one device<->host copy of exactly the
+  valid token range.  Per-layer `PagedAllocator`s remain the placement
+  bookkeeping (the paper's layer-granular tiering is untouched);
   `TieredKVStore` (via the attached NodeManager) stays the single source of
   truth for placement accounting; the backend mirrors it with physical
   copies.
 
 Token-id semantics in real mode (the "pending token" invariant): the last
 generated token of a sequence never has KV written — it is fed as the next
-step's input.  Prefill therefore consumes [pending] + prompt_ids and emits
-one token; each decode consumes the pending token, writes its KV, and emits
-the next.  A resume-after-swap is just a prefill with an empty prompt.
+step's input.  A turn's first chunk therefore consumes [pending] +
+prompt slice; mid-prompt chunks emit nothing (their tokens' KV is written,
+no token is sampled); the FINAL chunk emits one token; each decode consumes
+the pending token, writes its KV, and emits the next.  A resume-after-swap
+is just a final chunk with an empty prompt slice.
 """
 from __future__ import annotations
 
@@ -48,8 +54,27 @@ HBM, HOST = "hbm", "host"
 
 
 @dataclass
-class PrefillResult:
-    duration: float          # seconds this prefill occupied the node
+class LaneWork:
+    """One lane of a mixed serving step (the engine -> backend contract).
+
+    A decode lane is ``new_tokens=0, final=True, is_decode=True``; a
+    chunked-prefill lane consumes ``prompt_ids[start : start+new_tokens]``
+    and is ``final`` only on the chunk that exhausts the prompt (that chunk
+    emits the turn's first token).  ``first`` marks the request's first
+    step since (re)admission — the step that pays any residual KV-fetch
+    stall."""
+    req: object                  # InferenceRequest
+    new_tokens: int = 0          # prompt tokens consumed this step
+    start: int = 0               # offset of this chunk into req.prompt_ids
+    cached: int = 0              # engine-view context before this step
+    final: bool = True           # emits a token (decode, or last chunk)
+    first: bool = False          # first step since (re)admission
+    is_decode: bool = False      # an already-emitting lane (TBT-sensitive)
+
+
+@dataclass
+class StepResult:
+    duration: float          # seconds this fused step occupied the node
     stall: float = 0.0       # portion spent waiting on KV fetch/swap-in
 
 
@@ -73,12 +98,16 @@ class Backend:
         return 0.0
 
     # -- one engine iteration ----------------------------------------------
-    def prefill(self, req, cached: int, new_tokens: int,
-                now: float) -> PrefillResult:
+    def step(self, lanes: List[LaneWork], now: float) -> StepResult:
+        """Execute ONE mixed iteration (decode lanes + prefill chunks)."""
         raise NotImplementedError
 
-    def decode(self, running, now: float) -> float:
-        raise NotImplementedError
+    def plan_fits(self, lanes: List[LaneWork]) -> bool:
+        """Would `step(lanes)`'s all-or-nothing page allocation succeed?
+        Admission uses this for bounded lookahead past page-fragmentation-
+        blocked queue heads.  Sim has no pages — byte-level admission checks
+        already gate capacity."""
+        return True
 
     # -- preemption / lifecycle --------------------------------------------
     def swap_out(self, sid: str, n_tokens: int) -> None:
@@ -117,7 +146,13 @@ class Backend:
 
 
 class SimBackend(Backend):
-    """CostModel-timed backend: the simulator's execution model, verbatim."""
+    """CostModel-timed backend: the simulator's execution model, verbatim.
+
+    Mixed-step semantics mirror the real backend's single fused dispatch:
+    one `step` charges `CostModel.mixed_step_time` for its decode lanes and
+    prefill chunks together, plus the residual layer-wise KV-fetch stall
+    (`NodeManager.kv_stall`) of any lane on its first step since admission —
+    the sim-mode analogue of the real backend timing `_ensure_resident`."""
 
     def __init__(self, cost: CostModel, mgr):
         self.cost = cost
@@ -132,18 +167,18 @@ class SimBackend(Backend):
     def kv_in_use(self, running) -> float:
         return sum(self.cost.session_kv_bytes(r.ctx_tokens) for r in running)
 
-    def prefill(self, req, cached, new_tokens, now):
-        # residual stall for cached KV not yet HBM-resident (layer-wise)
-        stall = 0.0
-        if cached > 0:
-            step_est = self.cost.prefill_time(req.prompt_tokens, cached)
-            stall = self.mgr.kv_stall(req.session_id, now, step_est)
-        return PrefillResult(stall + self.cost.prefill_time(new_tokens,
-                                                            cached), stall)
-
-    def decode(self, running, now):
-        total_ctx = sum(r.ctx_tokens for r in running)
-        return self.cost.decode_step_time(len(running), total_ctx)
+    def step(self, lanes, now):
+        chunks = [(ln.new_tokens, ln.cached) for ln in lanes
+                  if ln.new_tokens > 0]
+        decode = [ln for ln in lanes if ln.new_tokens == 0 and ln.final]
+        compute = self.cost.mixed_step_time(
+            chunks, len(decode), sum(ln.cached for ln in decode))
+        # residual stall for cached KV not yet HBM-resident (layer-wise);
+        # lanes fetching concurrently overlap within the one fused step
+        stall = max((self.mgr.kv_stall(ln.req.session_id, now, compute)
+                     for ln in lanes if ln.first and ln.cached > 0),
+                    default=0.0)
+        return StepResult(compute + stall, stall)
 
 
 # ---------------------------------------------------------------------------
@@ -404,109 +439,149 @@ class RealBackend(Backend):
 
     # -- engine iteration ---------------------------------------------------
 
-    def prefill(self, req, cached, new_tokens, now) -> PrefillResult:
+    def _lane_ids(self, lane: LaneWork) -> List[int]:
+        """Token ids this lane processes: the pending token (whose KV is
+        written by this step) leads, then this chunk's slice of the prompt.
+        A decode lane is the pending token alone."""
+        st = self.seqs[lane.req.session_id]
+        ids = [] if st.last_token is None else [st.last_token]
+        if lane.new_tokens:
+            if lane.req.prompt_ids is None:
+                # a drop-preempted request re-enters with prompt_tokens > 0
+                # but no ids — the driver must resubmit the token history
+                # (ClusterRuntime does); serving a made-up context instead
+                # would silently corrupt the session
+                raise ValueError(
+                    f"{lane.req.session_id}: {lane.new_tokens} prompt "
+                    f"tokens requested but prompt_ids is None — resubmit "
+                    f"the request with its full token history")
+            ids.extend(lane.req.prompt_ids[lane.start:
+                                           lane.start + lane.new_tokens])
+        return ids
+
+    def plan_fits(self, lanes) -> bool:
+        """Mirror of step()'s all-or-nothing page check, without mutating:
+        per layer, the new KV slots of every lane (plus the full scatter of
+        any host/disk-staged layer a swapped-out lane brings back) must fit
+        the free list."""
+        for l, a in enumerate(self.alloc):
+            need = 0
+            for ln in lanes:
+                sid = ln.req.session_id
+                st = self.seqs.get(sid)
+                q = ln.new_tokens + (1 if st is not None
+                                     and st.last_token is not None else 0)
+                if st is not None and sid in a.seqs:
+                    s = a.seqs[sid]
+                    need += a.pages_for(s.n_tokens + q) - len(s.pages)
+                else:
+                    # swap-in rescatters the full history before the chunk
+                    base = st.n_kv if st is not None else 0
+                    need += a.pages_for(base + q)
+            if need > len(a.free_list):
+                return False
+        return True
+
+    def step(self, lanes, now) -> StepResult:
         import jax.numpy as jnp
         t0 = time.perf_counter()
-        sid = req.session_id
-        if req.output_ids is None:
-            req.output_ids = []
-        st = self.seqs.get(sid)
-        if st is None:
-            st = self.seqs[sid] = _SeqState(priority=req.priority)
-            for a in self.alloc:
-                a.allocate(sid, 0)
-        self._ensure_resident(sid)
-        e = self._store_entry(sid)
-        if e is not None:
-            e.pinned = True          # serving: not migratable/evictable
+        # tier fetch first (timed: swap-ins during decode are stall, not
+        # compute — they used to vanish from stall accounting entirely)
+        for ln in lanes:
+            sid = ln.req.session_id
+            if ln.req.output_ids is None:
+                ln.req.output_ids = []
+            st = self.seqs.get(sid)
+            if st is None:
+                st = self.seqs[sid] = _SeqState(priority=ln.req.priority)
+                for a in self.alloc:
+                    a.allocate(sid, 0)
+            self._ensure_resident(sid)
+            e = self._store_entry(sid)
+            if e is not None:
+                e.pinned = True      # serving: not migratable/evictable
         t_resident = time.perf_counter()
 
-        ids = list(req.prompt_ids or [])
-        if st.last_token is not None:
-            ids = [st.last_token] + ids          # pending token leads the turn
-        if not ids:
-            raise ValueError(f"{sid}: prefill with no tokens to process")
-        n_cached = st.n_kv
-        self._extend_all(sid, len(ids))
-        L = self.cfg.n_layers
-        Sq = len(ids)
-        Sqb = _bucket(Sq, 8)                     # new-token shape bucket
-        Tb = _bucket(max(len(self.alloc[l].seqs[sid].pages)
-                         for l in range(L)))     # table-width bucket
-        ids_p = np.zeros((Sqb,), np.int32)
-        ids_p[:Sq] = ids
-        tables = np.stack([self.alloc[l].block_table(sid, Tb)
-                           for l in range(L)])
-        # padded lanes scatter into the trash page (index n_pages)
-        pg = np.full((L, Sqb), self.n_pages, np.int32)
-        off = np.zeros((L, Sqb), np.int32)
-        for l in range(L):
-            p, o = self._slots(l, sid, n_cached, Sq)
-            pg[l, :Sq] = p
-            off[l, :Sq] = o
-        tok, logits, self.k_pool, self.v_pool = self.model.prefill_paged(
-            self.params, ids_p, self.k_pool, self.v_pool, tables, pg, off,
-            jnp.int32(n_cached), jnp.int32(Sq), kernel_mode=self.kernel_mode)
-        st.n_kv += Sq
-        if self.trace_logits:
-            self.logit_trace.append(
-                (sid, np.asarray(logits[:self.cfg.vocab])))
-        tok = int(tok)
-        st.last_token = tok
-        req.output_ids.append(tok)
-        self.stats["prefills"] += 1
-        t1 = time.perf_counter()
-        return PrefillResult(t1 - t0, stall=t_resident - t0)
-
-    def decode(self, running, now) -> float:
-        t0 = time.perf_counter()
-        sids = [r.req.session_id for r in running]
-        for sid in sids:
-            self._ensure_resident(sid)
-        # all-or-nothing growth across the batch: check before mutating
+        ids_by_lane = [self._lane_ids(ln) for ln in lanes]
+        for ln, ids in zip(lanes, ids_by_lane):
+            if not ids:
+                raise ValueError(f"{ln.req.session_id}: lane with no tokens "
+                                 f"to process")
+        sids = [ln.req.session_id for ln in lanes]
+        # all-or-nothing growth across the whole mixed batch: check every
+        # layer before mutating any allocator
         for a in self.alloc:
-            free = len(a.free_list)
-            need = sum(a.pages_for(a.seqs[s].n_tokens + 1)
-                       - len(a.seqs[s].pages) for s in sids)
-            if need > free:
-                raise OutOfPages(f"decode: need {need} pages, have {free}")
-        for sid in sids:
-            self._extend_all(sid, 1)
+            need = sum(a.pages_for(a.seqs[s].n_tokens + len(ids))
+                       - len(a.seqs[s].pages)
+                       for s, ids in zip(sids, ids_by_lane))
+            if need > len(a.free_list):
+                raise OutOfPages(f"step: need {need} pages, "
+                                 f"have {len(a.free_list)}")
+        for sid, ids in zip(sids, ids_by_lane):
+            self._extend_all(sid, len(ids))
+
         L = self.cfg.n_layers
-        B = len(sids)
-        Bb = _bucket(B)                          # batch shape bucket
+        B = len(lanes)
+        q_lens = [len(ids) for ids in ids_by_lane]
+        Sq = max(q_lens)
+        # tokens-per-step bucket: pure-decode steps sit at Sq = 1; chunked
+        # steps land on the power-of-two lattice.  No floor — the engine's
+        # token budget already controls the chunk-size lattice, and every
+        # lane in the batch pays Sqb query rows, so padding small chunks up
+        # to 8 would tax the decode lanes riding the same dispatch
+        Sqb = _bucket(Sq)
+        Bb = _bucket(B)                          # lane-count shape bucket
         Tb = _bucket(max(len(self.alloc[l].seqs[s].pages)
                          for l in range(L) for s in sids))
-        toks = np.zeros((Bb,), np.int32)
-        toks[:B] = [self.seqs[s].last_token for s in sids]
-        ctx = np.zeros((Bb,), np.int32)          # padded rows: ctx 0 -> masked
-        ctx[:B] = self.alloc[0].ctx_lens(sids)   # incl. pending
+        ids_p = np.zeros((Bb, Sqb), np.int32)
+        qoff = np.zeros((Bb,), np.int32)
+        ctx = np.zeros((Bb,), np.int32)          # padded lanes: ctx 0 -> masked
+        last = np.zeros((Bb,), np.int32)
         tables = np.zeros((L, Bb, Tb), np.int32)
-        pg = np.full((L, Bb), self.n_pages, np.int32)   # padded -> trash page
-        off = np.zeros((L, Bb), np.int32)
+        # padded slots scatter into the trash page (index n_pages)
+        pg = np.full((L, Bb, Sqb), self.n_pages, np.int32)
+        off = np.zeros((L, Bb, Sqb), np.int32)
         for l in range(L):
             tables[l, :B] = self.alloc[l].batch_block_tables(sids, Tb)
-            p, o = zip(*(self._slots(l, s, self.seqs[s].n_kv, 1)
-                         for s in sids))
-            pg[l, :B] = np.concatenate(p)
-            off[l, :B] = np.concatenate(o)
-        toks_dev, logits, self.k_pool, self.v_pool = self.model.decode_paged(
-            self.params, toks, self.k_pool, self.v_pool, tables, ctx,
-            pg, off, kernel_mode=self.kernel_mode)
+        for i, (sid, ids) in enumerate(zip(sids, ids_by_lane)):
+            st = self.seqs[sid]
+            n = len(ids)
+            ids_p[i, :n] = ids
+            qoff[i] = st.n_kv
+            ctx[i] = st.n_kv + n
+            last[i] = n - 1
+            for l in range(L):
+                p, o = self._slots(l, sid, st.n_kv, n)
+                pg[l, i, :n] = p
+                off[l, i, :n] = o
+        toks_dev, logits, self.k_pool, self.v_pool = self.model.step_paged(
+            self.params, ids_p, self.k_pool, self.v_pool, tables,
+            jnp.asarray(qoff), jnp.asarray(ctx), jnp.asarray(last), pg, off,
+            kernel_mode=self.kernel_mode)
         tok_np = np.asarray(toks_dev[:B])        # token ids only — no full-
         lg_np = None                             # logits sync unless tracing
         if self.trace_logits:
             lg_np = np.asarray(logits[:B, :self.cfg.vocab])
-        for i, sid in enumerate(sids):
-            st = self.seqs[sid]
-            st.n_kv += 1
-            if lg_np is not None:
-                self.logit_trace.append((sid, lg_np[i]))
-            tok = int(tok_np[i])
-            st.last_token = tok
-            running[i].req.output_ids.append(tok)
-        self.stats["decode_steps"] += 1
-        return time.perf_counter() - t0
+        any_decode = False
+        for i, (ln, ids) in enumerate(zip(lanes, ids_by_lane)):
+            st = self.seqs[ln.req.session_id]
+            st.n_kv += len(ids)
+            if ln.final:
+                if lg_np is not None:
+                    self.logit_trace.append((ln.req.session_id, lg_np[i]))
+                tok = int(tok_np[i])
+                st.last_token = tok
+                ln.req.output_ids.append(tok)
+            else:
+                st.last_token = None     # mid-prompt: nothing sampled
+            if ln.is_decode:
+                any_decode = True
+            elif ln.final:
+                self.stats["prefills"] += 1
+        if any_decode:
+            self.stats["decode_steps"] += 1
+        return StepResult(time.perf_counter() - t0,
+                          stall=t_resident - t0)
 
     # -- preemption / lifecycle ---------------------------------------------
 

@@ -116,6 +116,21 @@ class CostModel:
             hw.chips_per_replica * hw.hbm_bw * hw.mfu_decode_mem)
         return max(t_c, t_m)
 
+    def mixed_step_time(self, chunks, n_decode: int,
+                        decode_ctx_tokens: int) -> float:
+        """ONE fused mixed iteration: prefill chunks + batched decode lanes
+        execute as a single dispatch.  ``chunks`` is a list of
+        (new_tokens, cached_tokens) pairs — a long prompt split across
+        iterations shows up as one pair per step, so its attention term is
+        priced against the context it actually has at that step.  The model
+        degenerates exactly to ``prefill_time`` / ``decode_step_time`` when
+        one side is empty, which keeps sim numbers comparable across the
+        split->unified serving-step change."""
+        t = sum(self.prefill_time(n, c) for n, c in chunks)
+        if n_decode > 0:
+            t += self.decode_step_time(n_decode, decode_ctx_tokens)
+        return t
+
     # -- transfers ---------------------------------------------------------------------
 
     def transfer_time(self, nbytes: float, kind: str) -> float:

@@ -130,7 +130,8 @@ class ClusterRuntime:
                  model=None, params=None, n_pages: int = 64,
                  page_size: int = 8, kernel_mode: str = "auto",
                  spool_root: Optional[str] = None,
-                 trace_logits: bool = True):
+                 trace_logits: bool = True, token_budget: int = 512,
+                 admit_lookahead: int = 4):
         if mode not in ("sim", "real"):
             raise ValueError(f"unknown mode {mode!r} (sim|real)")
         self.cfg = cfg
@@ -177,7 +178,9 @@ class ClusterRuntime:
                 policy_reuses_kv=self.policy.reuses_kv,
                 swap_on_preempt=(self.policy.name != "stateless"
                                  or mode == "real"),
-                backend=self.backends.get(i))
+                backend=self.backends.get(i),
+                token_budget=token_budget,
+                admit_lookahead=admit_lookahead)
             if i not in self.backends:       # sim: engine built its own
                 self.backends[i] = self.engines[i].backend
         self.advisory_to_hbm = advisory_to_hbm

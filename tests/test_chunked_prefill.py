@@ -1,0 +1,199 @@
+"""Chunked prefill through the unified token-budget serving step.
+
+The engine splits prompts into <= token_budget chunks across iterations and
+packs them into the same fused dispatch as the running decode lanes.  Three
+things must hold:
+
+* chunking is INVISIBLE to results — token ids exactly equal (and
+  final-chunk/decode logits within fp32 tolerance of) the one-shot dense
+  reference, for chunk sizes on and off the Sq bucket boundaries, MHA and
+  GQA, including a genuinely mixed batch (decode lanes + a chunking prompt
+  in one dispatch);
+* chunk boundaries are RESUME points — a preemption that lands mid-prompt
+  swaps out the consumed chunks' KV and resumes from the boundary, never
+  recomputing a consumed token;
+* decode lanes keep emitting while a long prompt chunks through — the
+  bounded-TBT property the token budget exists for.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.advisory import InferenceRequest
+from repro.core.node_manager import NodeManager
+from repro.models.registry import get_model
+from repro.serving.backend import RealBackend
+from repro.serving.cost_model import CostModel, HardwareSpec
+from repro.serving.engine import NodeEngine
+
+GEN = 4
+TOL = dict(rtol=2e-3, atol=2e-3)
+_CACHE = {}
+
+
+def _model(kind: str, seed: int = 0):
+    if (kind, seed) not in _CACHE:
+        n_kv = dict(mha=4, gqa=2)[kind]
+        cfg = get_config("llama3-8b").reduced(dtype="float32",
+                                              n_kv_heads=n_kv)
+        model = get_model(cfg)
+        params = model.init(jax.random.key(seed))
+        _CACHE[(kind, seed)] = (cfg, model, params)
+    return _CACHE[(kind, seed)]
+
+
+def _engine(kind: str, seed: int = 0, n_pages: int = 64, max_batch: int = 8,
+            token_budget: int = 512):
+    cfg, model, params = _model(kind, seed)
+    cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+    cost.set_param_count(model.param_count())
+    mgr = NodeManager(0, cfg, cost)
+    be = RealBackend(cfg, model, params, mgr=mgr, n_pages=n_pages,
+                     page_size=8)
+    eng = NodeEngine(0, cfg, cost, mgr, max_batch=max_batch, backend=be,
+                     token_budget=token_budget)
+    return cfg, model, params, be, eng
+
+
+def _dense_reference(cfg, model, params, turns, gen=GEN):
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    history, out, logit_trail = [], [], []
+    for t in turns:
+        history = history + list(t)
+        logits, cache = prefill(params, jnp.asarray([history], jnp.int32))
+        cache = model.grow_cache(cache, gen)
+        outs = []
+        for _ in range(gen):
+            lg = logits[0, :cfg.vocab]
+            logit_trail.append(np.asarray(lg))
+            nxt = jnp.argmax(lg)[None].astype(jnp.int32)
+            outs.append(int(nxt[0]))
+            logits, cache = decode(params, cache, nxt)
+        out.append(outs)
+        history = history + outs
+    return out, logit_trail
+
+
+def _serve_turns(eng, be, turns, sid="s0", gen=GEN):
+    outs, cached, now = [], 0, 0.0
+    for t in turns:
+        req = InferenceRequest(session_id=sid, prompt_tokens=len(t),
+                               max_new_tokens=gen, prompt_ids=list(t),
+                               cached_tokens=cached)
+        eng.submit(req)
+        while eng.waiting or eng.running:
+            now += eng.step(now)
+        outs.append(req.output_ids)
+        cached = be.session_tokens(sid)
+    return outs
+
+
+@pytest.mark.parametrize("kind", ["mha", "gqa"])
+@pytest.mark.parametrize("budget", [4, 8, 13, 512])
+def test_chunked_vs_one_shot_token_exact(kind, budget):
+    """Chunk sizes below / on / off / above the Sq=8 bucket boundary must
+    all reproduce the one-shot dense reference exactly (and the chunking
+    itself must actually happen for the small budgets)."""
+    cfg, model, params = _model(kind)
+    rng = np.random.default_rng(11)
+    turns = [list(map(int, rng.integers(0, cfg.vocab, n))) for n in (17, 9)]
+    want, want_logits = _dense_reference(cfg, model, params, turns)
+    _, _, _, be, eng = _engine(kind, token_budget=budget)
+    got = _serve_turns(eng, be, turns)
+    assert got == want, f"token divergence (budget={budget}, {kind})"
+    # every prompt token prefilled exactly once, whatever the chunking
+    assert eng.stats["prefill_tokens"] == sum(len(t) for t in turns)
+    if budget < 17:
+        assert eng.stats["chunks"] > len(turns), "no chunking happened"
+    # the emission trail (final chunks + decodes) matches the dense trail
+    trace = [lg for _sid, lg in be.logit_trace]
+    assert len(trace) == len(want_logits)
+    for got_lg, want_lg in zip(trace, want_logits):
+        np.testing.assert_allclose(got_lg, want_lg, **TOL)
+
+
+def test_decode_lanes_keep_emitting_during_long_prefill():
+    """A long prompt arriving mid-decode chunks through the SAME fused
+    steps as the running lane, which keeps emitting one token per step —
+    the bounded-TBT property.  Both sessions stay token-exact."""
+    cfg, model, params = _model("gqa")
+    rng = np.random.default_rng(5)
+    p_a = list(map(int, rng.integers(0, cfg.vocab, 6)))
+    p_b = list(map(int, rng.integers(0, cfg.vocab, 23)))
+    want_a = _dense_reference(cfg, model, params, [p_a], gen=12)[0][0]
+    want_b = _dense_reference(cfg, model, params, [p_b], gen=GEN)[0][0]
+    _, _, _, be, eng = _engine("gqa", token_budget=6)
+    req_a = InferenceRequest(session_id="a", prompt_tokens=len(p_a),
+                             max_new_tokens=12, prompt_ids=list(p_a))
+    eng.submit(req_a)
+    now = eng.step(0.0)        # A's prompt fits one budget: emits token 1
+    now += eng.step(now)       # A decodes
+    assert len(req_a.output_ids) == 2
+    req_b = InferenceRequest(session_id="b", prompt_tokens=len(p_b),
+                             max_new_tokens=GEN, prompt_ids=list(p_b))
+    eng.submit(req_b)
+    # B needs ceil(23/6) = 4 chunk steps; A must emit on every one of them
+    while not req_b.output_ids:
+        before = len(req_a.output_ids)
+        now += eng.step(now)
+        assert len(req_a.output_ids) == before + 1, \
+            "decode lane stalled behind a chunking prompt"
+    while eng.waiting or eng.running:
+        now += eng.step(now)
+    assert req_a.output_ids == want_a
+    assert req_b.output_ids == want_b
+    assert eng.stats["chunks"] >= 4
+
+
+@pytest.mark.parametrize("kind", ["mha", "gqa"])
+def test_preemption_mid_prompt_resumes_from_chunk_boundary(kind):
+    """Preempt while the prompt is partially consumed: the consumed chunks'
+    KV swaps out and back, the remainder resumes from the boundary, and no
+    prompt token is ever prefilled twice."""
+    cfg, model, params = _model(kind)
+    rng = np.random.default_rng(7)
+    prompt = list(map(int, rng.integers(0, cfg.vocab, 20)))
+    want = _dense_reference(cfg, model, params, [prompt])[0][0]
+    _, _, _, be, eng = _engine(kind, token_budget=6)
+    req = InferenceRequest(session_id="s0", prompt_tokens=len(prompt),
+                           max_new_tokens=GEN, prompt_ids=list(prompt))
+    eng.submit(req)
+    now = eng.step(0.0)                       # chunk 1: 6 of 20 consumed
+    (r,) = eng.running
+    assert r.prompt_left == 14 and r.consumed == 6
+    assert eng.preempt_one(now) is req        # lands mid-prompt
+    assert be.stats["swaps_out"] == 1
+    assert req.cached_tokens == 6             # chunk-boundary state
+    assert req.prompt_tokens == 14 and len(req.prompt_ids) == 14
+    while eng.waiting or eng.running:
+        now += eng.step(now)
+    assert req.output_ids == want, f"divergence after mid-prompt preempt " \
+                                   f"({kind})"
+    assert be.stats["swaps_in"] >= 1
+    # resume started at the boundary: 20 prompt tokens prefilled in total
+    assert eng.stats["prefill_tokens"] == len(prompt)
+
+
+def test_chunked_prefill_compile_census_shared_with_decode():
+    """A pure-decode step after chunked prefill reuses the (B, 1) decode
+    bucket — chunking must not add per-context-length compilations."""
+    # seed 9: a model instance no other test shares, so the census is clean
+    cfg, model, params = _model("mha", seed=9)
+    rng = np.random.default_rng(3)
+    _, _, _, be, eng = _engine("mha", seed=9, token_budget=8)
+    turns = [list(map(int, rng.integers(0, cfg.vocab, 24)))]
+    _serve_turns(eng, be, turns)
+    counts = be.compile_counts()["step"]
+    # chunks share one (1, 8, T) bucket per table width; decode shares
+    # (1, 1, T) — the census is bounded by the bucket grid, not step count
+    assert counts <= 6, be.compile_counts()
+    # re-serving identical shapes on a fresh backend adds nothing
+    _, _, _, be2, eng2 = _engine("mha", seed=9, token_budget=8)
+    rng = np.random.default_rng(3)
+    _serve_turns(eng2, be2, [list(map(int,
+                                      rng.integers(0, cfg.vocab, 24)))])
+    assert be2.compile_counts()["step"] == counts, "steady state recompiled"

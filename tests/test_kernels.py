@@ -9,7 +9,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import paged_attention, \
+    paged_chunk_attention
 
 TOL = dict(rtol=2e-2, atol=2e-2)      # bf16-friendly
 TOL32 = dict(rtol=2e-4, atol=2e-4)
@@ -70,6 +71,79 @@ def test_paged_attention_page_permutation_invariance():
                            interpret=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
                                rtol=1e-6, atol=1e-6)
+
+
+def _mk_chunk(rng, B, Sq, H, Hkv, D, page, maxp, dtype, decode=False):
+    P = maxp * B + 2
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, D)), dtype)
+    kp = jnp.asarray(rng.normal(size=(P, page, Hkv, D)), dtype)
+    vp = jnp.asarray(rng.normal(size=(P, page, Hkv, D)), dtype)
+    tables = jnp.asarray(
+        rng.permutation(P)[:B * maxp].reshape(B, maxp), jnp.int32)
+    if decode:                                  # q_len 1: qoff = ctx - 1
+        ctx = rng.integers(1, maxp * page + 1, (B,))
+        qoff = ctx - 1
+    else:                                       # mixed chunk lengths
+        qlen = rng.integers(1, Sq + 1, (B,))
+        qoff = rng.integers(0, maxp * page - Sq + 1, (B,))
+        ctx = qoff + qlen
+    return (q, kp, vp, tables, jnp.asarray(qoff, jnp.int32),
+            jnp.asarray(ctx, jnp.int32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,H,Hkv,D,page,maxp", [
+    (2, 8, 4, 4, 32, 8, 4),        # MHA, mixed chunks
+    (3, 16, 8, 2, 64, 16, 4),      # GQA 4:1
+    (1, 8, 8, 1, 128, 32, 2),      # MQA
+])
+def test_paged_chunk_attention_sweep(B, Sq, H, Hkv, D, page, maxp, dtype):
+    """Unified kernel vs oracle on mixed per-lane (q_len, ctx) geometry;
+    only each lane's valid query rows are compared (padded rows are
+    garbage by contract)."""
+    rng = np.random.default_rng(hash((B, Sq, H)) % 2**32)
+    args = _mk_chunk(rng, B, Sq, H, Hkv, D, page, maxp, dtype)
+    out = paged_chunk_attention(*args, bq=4, interpret=True)
+    want = ref.paged_chunk_attention_ref(*args)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    qoff, ctx = np.asarray(args[4]), np.asarray(args[5])
+    for b in range(B):
+        qlen = int(ctx[b] - qoff[b])
+        np.testing.assert_allclose(np.asarray(out[b, :qlen], np.float32),
+                                   np.asarray(want[b, :qlen], np.float32),
+                                   **tol)
+
+
+def test_paged_chunk_attention_decode_is_special_case():
+    """A batch of q_len = 1 lanes must agree with the dedicated decode
+    kernel's oracle — decode is the one-token chunk, not a separate path."""
+    rng = np.random.default_rng(23)
+    q, kp, vp, tables, qoff, ctx = _mk_chunk(
+        rng, 3, 1, 8, 4, 32, 8, 4, jnp.float32, decode=True)
+    out = paged_chunk_attention(q, kp, vp, tables, qoff, ctx, bq=1,
+                                interpret=True)
+    want = ref.paged_attention_ref(q[:, 0], kp, vp, tables, ctx)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(want),
+                               **TOL32)
+
+
+def test_paged_chunk_attention_padded_lane_is_inert():
+    """ctx_len = 0 lanes must finish as zeros without poisoning the batch,
+    and their presence must not change live lanes' outputs."""
+    rng = np.random.default_rng(29)
+    q, kp, vp, tables, qoff, ctx = _mk_chunk(
+        rng, 3, 8, 4, 2, 32, 8, 4, jnp.float32)
+    full = paged_chunk_attention(q, kp, vp, tables, qoff, ctx,
+                                 bq=4, interpret=True)
+    ctx_pad = ctx.at[1].set(0)
+    out = paged_chunk_attention(q, kp, vp, tables, qoff, ctx_pad,
+                                bq=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[1]), 0.0)
+    for b in (0, 2):
+        qlen = int(ctx[b] - qoff[b])
+        np.testing.assert_allclose(np.asarray(out[b, :qlen]),
+                                   np.asarray(full[b, :qlen]),
+                                   rtol=1e-6, atol=1e-6)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
