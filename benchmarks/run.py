@@ -5,9 +5,11 @@ by 1e6 into the us column; the derived field says what they mean).
 ``--serving`` aggregates the two serving artifacts
 (results/bench/BENCH_step.json + BENCH_cluster.json) into the top-level
 ``results/bench/BENCH_serving.json`` scorecard: steady-state TBT
-median/p99, the long-prompt-interference TBT bound, cluster throughput,
-compile counts, and copied bytes — the one file CI uploads and gates
-(decode-p99-under-interference must not regress vs the committed copy)."""
+median/p99, the long-prompt-interference TBT bound, the async swap-in
+overlap profile (advisory-led residual stall must stay ~0), cluster
+throughput, compile counts, and copied bytes — the one file CI uploads and
+gates (decode-p99-under-interference must not regress vs the committed
+copy)."""
 from __future__ import annotations
 
 import argparse
@@ -38,6 +40,7 @@ def aggregate_serving() -> dict:
     p90s = sorted(c["decode_ms_p90"] for c in cfgs
                   if c.get("decode_ms_p90") is not None)
     inter = step.get("interference", {})
+    over = step.get("overlap", {})
     sym = cluster.get("symphony", {})
     per_node = sym.get("per_node", {})
     out = dict(
@@ -58,6 +61,13 @@ def aggregate_serving() -> dict:
             interference_compiles=inter.get("interference_compiles"),
             token_budget=inter.get("token_budget"),
             prompt_len=inter.get("prompt_len"),
+        ),
+        overlap=dict(
+            stall_cold_ms=over.get("stall_cold_ms"),
+            stall_warm_ms=over.get("stall_warm_ms"),
+            overlap_ratio=over.get("overlap_ratio"),
+            ctx_len=over.get("ctx_len"),
+            lead_steps=over.get("lead_steps"),
         ),
         cluster=dict(
             throughput_rps=sym.get("throughput_rps"),

@@ -15,7 +15,7 @@ from typing import Dict, Optional
 from repro.core.advisory import AdvisoryRequest
 from repro.core.memory import DISK, HBM, HOST, TieredKVStore
 from repro.serving.cost_model import CostModel
-from repro.serving.kv_cache import OutOfPages
+from repro.serving.transfer import OUT
 
 
 @dataclass
@@ -38,13 +38,18 @@ class NodeManager:
         # simulated transfer channels: busy-until timestamps
         self.chan: Dict[str, float] = {"h2d": 0.0, "peer": 0.0, "disk": 0.0}
         self.fetches: Dict[str, FetchState] = {}
+        # completion time of each session's last disk write-through: a
+        # crash BEFORE this time poisons the in-flight write (the copy
+        # never finished — it must not be a recovery substrate)
+        self.disk_done: Dict[str, float] = {}
         self.pod_of = pod_of
         self.peers: Dict[int, "NodeManager"] = {}
         # real-mode execution backend (serving/backend.py); when attached,
         # every placement decision below also moves actual page contents
         self.backend = None
         self.stats = dict(prefetches=0, migrations=0, migrated_bytes=0.0,
-                          evictions=0, disk_writes=0, recoveries=0)
+                          evictions=0, disk_writes=0, recoveries=0,
+                          swaps_in=0, promoted_layers=0)
 
     def register_peers(self, managers: Dict[int, "NodeManager"]) -> None:
         self.peers = managers
@@ -103,28 +108,45 @@ class NodeManager:
     def promote(self, sid: str, now: float) -> None:
         """Greedy cooperative promotion: lower layers first into free HBM.
 
-        Best-effort by contract: the physical page copy happens BEFORE the
-        accounting move, so a backend that runs out of physical pages
-        (fragmentation the byte-level store cannot see) stops the plan with
-        the remaining layers left in the slow tier — the advisory path never
-        raises and store accounting never diverges from placement."""
+        The advisory path ENQUEUES, it never copies inline: the backend
+        allocates pages for the plan and launches one asynchronous
+        host->device scatter (`Backend.prefetch`), then returns — by the
+        time the engine admits the request the copy has drained under the
+        intervening compute and `_ensure_resident` only fences the future.
+
+        Best-effort by contract: page allocation happens at enqueue BEFORE
+        the accounting move, so a backend that runs out of physical pages
+        (fragmentation the byte-level store cannot see) cuts the plan short
+        with the remaining layers left in the slow tier — the advisory path
+        never raises and store accounting never diverges from placement."""
         e = self.store.entries.get(sid)
         if e is None:
             return
         fs = self.fetches.setdefault(
             sid, FetchState(ready_at=[now] * e.n_layers))
-        for l, src in self.store.promotion_plan(sid):
-            if self.backend is not None:
-                try:
-                    self.backend.promote_layer(sid, l)
-                except OutOfPages:
-                    break            # HBM physically full: stay in slow tier
+        plan = self.store.promotion_plan(sid)
+        if not plan:
+            return
+        launched = None
+        if self.backend is not None:
+            got = self.backend.prefetch(sid, [l for l, _ in plan])
+            launched = None if got is None else set(got)
+        moved = 0
+        for l, src in plan:
+            if launched is not None and l not in launched:
+                break            # HBM physically full: stay in slow tier
             kind = "h2d" if src in (HOST,) else "disk_r"
             chan = "h2d" if src == HOST else "disk"
             start = max(now, fs.ready_at[l] if l < len(fs.ready_at) else now)
             done = self._enqueue(chan, e.bytes_per_layer, kind, start)
             fs.ready_at[l] = done
             self.store.move_layer(sid, l, HBM)
+            moved += 1
+        if moved:
+            # one session swap-in occurrence + its layer count — identical
+            # accounting on both backends (the sim/real parity observable)
+            self.stats["swaps_in"] += 1
+            self.stats["promoted_layers"] += moved
 
     def _disk_writethrough(self, sid: str, now: float) -> None:
         e = self.store.entries.get(sid)
@@ -132,7 +154,10 @@ class NodeManager:
             return
         if self.backend is not None and not self.backend.persist(sid):
             return        # nothing physically written: invariant not claimable
-        self._enqueue("disk", e.total_bytes, "disk_w", now)
+        # the write is modeled (and in real mode launched) asynchronously;
+        # record when it lands so a crash before then poisons it
+        self.disk_done[sid] = self._enqueue("disk", e.total_bytes,
+                                            "disk_w", now)
         self.store.ensure_persistent(sid)
         self.stats["disk_writes"] += 1
 
@@ -140,7 +165,12 @@ class NodeManager:
 
     def kv_stall(self, sid: str, now: float, step_time: float) -> float:
         """Seconds of critical-path stall to begin computing with this
-        session's KV, given layer-wise async reads."""
+        session's KV, given layer-wise async reads.  Each layer's residual
+        is `CostModel.overlap_stall(remaining transfer, compute it can hide
+        behind)` — the same overlap model the real backend realizes by
+        fencing in-flight futures, so sim and real agree by construction:
+        a transfer launched (advisory) early enough has remaining <= the
+        compute walk and contributes zero."""
         e = self.store.entries.get(sid)
         if e is None:
             return 0.0                       # nothing cached: pure prefill
@@ -157,8 +187,9 @@ class NodeManager:
                 kind = ("h2d", "disk_r")[t == DISK]
                 fetch_q += self.cost.transfer_time(e.bytes_per_layer, kind)
                 ready = max(ready, now + fetch_q)
-            stall = max(stall, ready - (now + l * per_layer))
-        return max(0.0, stall)
+            stall = max(stall, self.cost.overlap_stall(ready - now,
+                                                       l * per_layer))
+        return stall
 
     def mark_resident(self, sid: str, n_tokens: int,
                       bytes_per_layer: float, priority: int = 0) -> None:
@@ -185,6 +216,11 @@ class NodeManager:
             if self.backend is not None:
                 self.backend.evict_layer(sid, l)
             self._disk_writethrough(sid, now)
+        if evicted and self.backend is not None:
+            # pressure wants the pages NOW: every victim layer's gather was
+            # launched above and the copies overlap each other — one
+            # barrier reclaims all their leased pages
+            self.backend.drain_transfers(OUT)
         return self.store.free(HBM)
 
     def flush_session(self, sid: str, now: float) -> None:
@@ -198,6 +234,7 @@ class NodeManager:
     def drop_session(self, sid: str) -> None:
         self.store.drop(sid)
         self.fetches.pop(sid, None)
+        self.disk_done.pop(sid, None)
         if self.backend is not None:
             self.backend.drop(sid)
 
@@ -225,6 +262,17 @@ class NodeManager:
             payload = dead.backend.recover_session(sid)
             if payload is None:
                 return False     # no physical copy: recovery not claimable
+            tokens = payload["n_kv"] + (payload["last_token"] is not None)
+            if tokens != e.n_tokens:
+                # STALE snapshot: the session grew after this copy and the
+                # fresher write-through died in flight with the node —
+                # serving it would be phantom (truncated) KV.  Fall back to
+                # recompute; the consumed spool file was stale anyway.
+                # (Real mode only by construction: sim has no file whose
+                # content can lag — `TieredKVStore.grow` resets on_disk on
+                # every growth, so a sim entry that kept on_disk through
+                # `crash(now)` was flushed at its current n_tokens.)
+                return False
         ready = []
         for l in range(e.n_layers):
             done = self._enqueue("disk", e.bytes_per_layer, "disk_r", now)
@@ -240,11 +288,26 @@ class NodeManager:
         self.stats["recoveries"] += 1
         return True
 
-    def crash(self) -> None:
-        """Lose HBM/host tiers; the disk spool survives (recovery path)."""
+    def crash(self, now: Optional[float] = None) -> None:
+        """Lose HBM/host tiers; the disk spool survives (recovery path).
+
+        With ``now``, in-flight disk write-throughs are POISONED: a session
+        whose write-through had not completed by the crash instant has no
+        durable copy — claiming one would recover phantom KV.  Without
+        ``now`` every recorded write is treated as complete (back-compat
+        for callers outside the event loop).  In real mode a physically
+        written spool file overrides the modeled completion time (physical
+        first, accounting second): the entry stays recoverable, and the
+        recovery path's freshness check consumes-and-rejects the file if
+        it turns out stale — which also keeps dead spools from
+        accumulating orphaned snapshots."""
         for sid in list(self.store.entries):
             e = self.store.entries[sid]
-            if not e.on_disk:
+            persisted = e.on_disk and (
+                now is None or self.disk_done.get(sid, 0.0) <= now
+                or (self.backend is not None
+                    and self.backend.spool_exists(sid)))
+            if not persisted:
                 self.store.drop(sid)
             else:
                 for l in range(e.n_layers):
@@ -252,3 +315,4 @@ class NodeManager:
                 e.pinned = False     # whoever was serving it is gone
         self.chan = {k: 0.0 for k in self.chan}
         self.fetches.clear()
+        self.disk_done.clear()

@@ -28,7 +28,8 @@ class DenseLM:
         # recording the signatures we dispatch gives an exact compile census
         # without reaching into jit internals (see paged_compile_counts)
         self._step_jit = None
-        self._compile_keys = dict(step=set())
+        self._scatter_jit = None
+        self._compile_keys = dict(step=set(), scatter=set())
 
     # -- parameters ---------------------------------------------------------
 
@@ -320,6 +321,28 @@ class DenseLM:
                 q_offsets, ctx_lens, last_idx, slot_pages, slot_offs)
         self._compile_keys["step"].add(self._shape_sig(args, kernel_mode))
         return self._step_jit(*args, kernel_mode=kernel_mode)
+
+    @staticmethod
+    def _scatter_paged_impl(k_pool, v_pool, layer_ids, pages, offs, ks, vs):
+        return (k_pool.at[layer_ids, pages, offs].set(ks),
+                v_pool.at[layer_ids, pages, offs].set(vs))
+
+    def scatter_paged(self, k_pool, v_pool, layer_ids, pages, offs, ks, vs):
+        """Swap-in / prefetch scatter of host-staged KV into the stacked
+        pools.  Donating the pools is what keeps peak device memory at 1x
+        per side — an undonated `.at[].set()` transiently materializes a
+        second full pool.  Shapes must be bucket-padded by the caller (pad
+        rows/slots aimed at the trash page) so each scatter compiles once
+        per (rows, tokens) bucket, censused under the "scatter" key.
+
+        layer_ids: (G, 1) int32; pages/offs: (G, n) int32 destinations;
+        ks/vs: (G, n, Hkv, D) payloads.  Returns (k_pool, v_pool)."""
+        if self._scatter_jit is None:
+            self._scatter_jit = jax.jit(self._scatter_paged_impl,
+                                        donate_argnums=(0, 1))
+        args = (k_pool, v_pool, layer_ids, pages, offs, ks, vs)
+        self._compile_keys["scatter"].add(self._shape_sig(args, "scatter"))
+        return self._scatter_jit(*args)
 
     @staticmethod
     def _shape_sig(args, kernel_mode: str):

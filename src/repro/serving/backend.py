@@ -21,14 +21,30 @@ identical in both modes:
   SHAPE-BUCKETED — lane count, tokens-per-step, and block-table width are
   padded to power-of-two buckets, and everything data-dependent
   (q_offsets, ctx_lens, last_idx) is traced — so each fused step compiles
-  at most once per bucket instead of once per turn/context length.  Tier
-  transfers (swap/evict/promote/persist/export) ride the stacked layout:
-  all layers of a session move in one device<->host copy of exactly the
-  valid token range.  Per-layer `PagedAllocator`s remain the placement
-  bookkeeping (the paper's layer-granular tiering is untouched);
-  `TieredKVStore` (via the attached NodeManager) stays the single source of
-  truth for placement accounting; the backend mirrors it with physical
-  copies.
+  at most once per bucket instead of once per turn/context length.
+
+ALL tier movement is ASYNCHRONOUS (serving/transfer.py): swap-outs,
+layer evictions, disk persists and advisory prefetches are *launched* —
+the device-side gather/scatter is dispatched, device->host copies started
+— and tracked as in-flight `Transfer` futures while the engine keeps
+dispatching fused steps.  A swap-out's pages are only *leased* back
+(`PagedAllocator.lease`) until its copy lands, so a preempted or failed
+transfer never loses KV; an advisory prefetch allocates pages and launches
+the host->device scatter ahead of admission, so `_ensure_resident`
+degenerates to "fence the already-launched future" and the measured
+`stall` is only the *residual* wait (~0 when the advisory led by enough —
+the sim-mode analogue is `CostModel.overlap_stall`).  Completion
+bookkeeping (realizing host arrays, releasing leases, moving
+`TieredKVStore` accounting, deferred npz writes) runs at deterministic
+drain points: `poll_transfers` at step edges, blocking fences at
+consumers, and allocation-pressure reclaims.  `crash()` POISONS in-flight
+transfers — nothing is installed, written, or accounted — so a node
+failure mid-transfer can never deliver phantom KV.
+
+Per-layer `PagedAllocator`s remain the placement bookkeeping (the paper's
+layer-granular tiering is untouched); `TieredKVStore` (via the attached
+NodeManager) stays the single source of truth for placement accounting;
+the backend mirrors it with physical copies.
 
 Token-id semantics in real mode (the "pending token" invariant): the last
 generated token of a sequence never has KV written — it is fed as the next
@@ -40,6 +56,7 @@ is just a final chunk with an empty prompt slice.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -49,8 +66,16 @@ import numpy as np
 
 from repro.serving.cost_model import CostModel
 from repro.serving.kv_cache import OutOfPages, PagedAllocator
+from repro.serving.transfer import (IN, OUT, PERSIST, PendingPayload,
+                                    Transfer, TransferEngine)
 
 HBM, HOST = "hbm", "host"
+
+
+class LostKV(RuntimeError):
+    """A session's KV is unreachable in every tier (e.g. its transfer was
+    poisoned by a crash).  Raised instead of silently serving a fabricated
+    context — the driver must recover from a spool or resubmit history."""
 
 
 @dataclass
@@ -109,6 +134,14 @@ class Backend:
         already gate capacity."""
         return True
 
+    # -- async tier transfers (sim: nothing physically in flight) -----------
+    def poll_transfers(self) -> None:
+        """Non-blocking: run completion bookkeeping for any in-flight tier
+        transfer whose copy already finished."""
+
+    def drain_transfers(self, kind: Optional[str] = None) -> None:
+        """Blocking fence of all in-flight transfers (of one kind)."""
+
     # -- preemption / lifecycle --------------------------------------------
     def swap_out(self, sid: str, n_tokens: int) -> None:
         pass
@@ -123,12 +156,18 @@ class Backend:
     def evict_layer(self, sid: str, layer: int) -> None:
         pass
 
-    def promote_layer(self, sid: str, layer: int) -> None:
-        pass
+    def prefetch(self, sid: str, layers: List[int]) -> Optional[List[int]]:
+        """Advisory-path swap-in: enqueue async host->device copies for as
+        many of ``layers`` (in priority order) as physically fit; returns
+        the launched prefix.  None means "no physical pages" (sim): every
+        planned layer moves in accounting."""
+        return None
 
     def persist(self, sid: str) -> bool:
-        """Write a complete copy to the slowest tier; returns whether a copy
-        now exists (sim: the modeled write always happens)."""
+        """Write-through a complete copy to the slowest tier; returns
+        whether the write is underway/exists (sim: the modeled write always
+        happens).  Real mode launches the gather asynchronously — recovery
+        is gated on the physically written file, never on this flag."""
         return True
 
     def export_session(self, sid: str) -> Optional[dict]:
@@ -141,6 +180,11 @@ class Backend:
     def crash(self) -> None:
         pass
 
+    def spool_exists(self, sid: str) -> bool:
+        """Does a physically written spool copy exist right now?  Sim has
+        no files — the store's modeled accounting is the only truth."""
+        return False
+
     def recover_session(self, sid: str) -> Optional[dict]:
         return None
 
@@ -151,8 +195,9 @@ class SimBackend(Backend):
     Mixed-step semantics mirror the real backend's single fused dispatch:
     one `step` charges `CostModel.mixed_step_time` for its decode lanes and
     prefill chunks together, plus the residual layer-wise KV-fetch stall
-    (`NodeManager.kv_stall`) of any lane on its first step since admission —
-    the sim-mode analogue of the real backend timing `_ensure_resident`."""
+    (`NodeManager.kv_stall`, built on `CostModel.overlap_stall`) of any
+    lane on its first step since admission — the sim-mode analogue of the
+    real backend fencing its in-flight swap-in futures."""
 
     def __init__(self, cost: CostModel, mgr):
         self.cost = cost
@@ -206,7 +251,8 @@ class RealBackend(Backend):
     The "HBM" tier is one (L, P+1, page, Hkv, D) jnp pool per side (page
     index P is the trash page that padded lanes scatter into — it is never
     allocated or gathered); the host tier is numpy arrays keyed (sid,
-    layer); the optional disk tier is an .npz spool directory.  One
+    layer) — or `PendingPayload` futures while a device->host copy is in
+    flight; the optional disk tier is an .npz spool directory.  One
     PagedAllocator per layer hands out pages — allocators stay in lockstep
     except where the node manager evicted individual layers (the paper's
     layer-granular placement).
@@ -237,8 +283,9 @@ class RealBackend(Backend):
         self.v_pool = jnp.zeros(shape, self.dtype)
         self.alloc: List[PagedAllocator] = [
             PagedAllocator(n_pages, page_size) for _ in range(L)]
-        self.host: Dict[Tuple[str, int], dict] = {}   # (sid, layer) -> k/v np
-        self.seqs: Dict[str, _SeqState] = {}
+        self.host: Dict[Tuple[str, int], object] = {}  # (sid, layer) ->
+        self.seqs: Dict[str, _SeqState] = {}           # np dict | Pending
+        self.transfers = TransferEngine()
         self.spool = Path(spool_dir) if spool_dir else None
         if self.spool:
             self.spool.mkdir(parents=True, exist_ok=True)
@@ -251,8 +298,9 @@ class RealBackend(Backend):
         self.logit_trace: List[Tuple[str, np.ndarray]] = []
 
     def compile_counts(self) -> Dict[str, int]:
-        """Distinct XLA compilations of the fused serving steps (at most one
-        per shape bucket; shared across backends serving the same model)."""
+        """Distinct XLA compilations of the fused serving step ("step") and
+        the donating tier-scatter ("scatter") — at most one per shape
+        bucket; shared across backends serving the same model."""
         return self.model.paged_compile_counts()
 
     def attach(self, mgr) -> None:
@@ -281,6 +329,8 @@ class RealBackend(Backend):
         return self.n_pages * self.page_size * self._token_bytes
 
     def kv_in_use(self, running) -> float:
+        # used_pages includes leased pages: an in-flight swap-out still
+        # physically occupies its source pages until the copy lands
         used = max(a.used_pages for a in self.alloc)
         return used * self.page_size * self._token_bytes
 
@@ -298,7 +348,21 @@ class RealBackend(Backend):
             return 0
         return st.n_kv + (1 if st.last_token is not None else 0)
 
-    # -- page plumbing ------------------------------------------------------
+    # -- async transfer plumbing -------------------------------------------
+
+    def poll_transfers(self) -> None:
+        self.transfers.poll()
+
+    def drain_transfers(self, kind: Optional[str] = None) -> None:
+        self.transfers.fence(kind=kind)
+
+    def _host_payload(self, sid: str, layer: int) -> Optional[dict]:
+        """Host-tier payload for (sid, layer), fencing its in-flight
+        gather if one is still draining.  None if absent or poisoned."""
+        p = self.host.get((sid, layer))
+        if isinstance(p, PendingPayload):
+            p = p.get()
+        return p
 
     def _slots(self, layer: int, sid: str, start: int, n: int):
         """(page_ids, offsets) for token positions [start, start+n)."""
@@ -307,49 +371,156 @@ class RealBackend(Backend):
         return pages[pos // self.page_size], \
             np.asarray(pos % self.page_size, np.int32)
 
-    def _gather_layers(self, sid: str, layers: List[int]
-                       ) -> Dict[int, dict]:
-        """Copy many (sid, layer) KV slices out of the stacked pool with ONE
-        device->host transfer per side, sliced on device to the valid token
-        range (padding bytes never cross the bus or count in stats)."""
+    def _gather_device(self, sid: str, layers: List[int]):
+        """Dispatch the device-side slice of many (sid, layer) KV ranges
+        and START their device->host copies without waiting: one async
+        copy per side per (n_tokens, n_pages) group, sliced on device to
+        the valid token range (padding never crosses the bus or counts in
+        stats).  Returns (groups, empties): in-flight device arrays and
+        already-realized zero-page payloads."""
         import jax.numpy as jnp
         c = self.cfg
-        out: Dict[int, dict] = {}
-        groups: Dict[Tuple[int, int], List[int]] = {}
+        groups, empties = [], {}
+        by: Dict[Tuple[int, int], List[int]] = {}
         for l in layers:
             s = self.alloc[l].seqs[sid]
-            groups.setdefault((s.n_tokens, len(s.pages)), []).append(l)
-        for (n, npg), ls in groups.items():
+            by.setdefault((s.n_tokens, len(s.pages)), []).append(l)
+        for (n, npg), ls in by.items():
             if npg == 0:
-                empty = np.zeros((0, c.n_kv_heads, c.d_head), self.dtype)
+                em = np.zeros((0, c.n_kv_heads, c.d_head), self.dtype)
                 for l in ls:
-                    out[l] = dict(k=empty, v=empty, n_tokens=n)
+                    empties[l] = dict(k=em, v=em, n_tokens=n)
                 continue
             li = jnp.asarray(ls, jnp.int32)[:, None]
             pi = jnp.asarray(np.stack(
                 [self.alloc[l].seqs[sid].pages for l in ls]), jnp.int32)
-            k = np.asarray(self.k_pool[li, pi].reshape(
-                len(ls), npg * self.page_size, c.n_kv_heads, c.d_head)[:, :n])
-            v = np.asarray(self.v_pool[li, pi].reshape(
-                len(ls), npg * self.page_size, c.n_kv_heads, c.d_head)[:, :n])
-            self.stats["copied_bytes"] += k.nbytes + v.nbytes
-            for i, l in enumerate(ls):
-                out[l] = dict(k=k[i], v=v[i], n_tokens=n)
+            k = self.k_pool[li, pi].reshape(
+                len(ls), npg * self.page_size, c.n_kv_heads, c.d_head)[:, :n]
+            v = self.v_pool[li, pi].reshape(
+                len(ls), npg * self.page_size, c.n_kv_heads, c.d_head)[:, :n]
+            k.copy_to_host_async()
+            v.copy_to_host_async()
+            groups.append(dict(layers=ls, n=n, k=k, v=v))
+        return groups, empties
+
+    @staticmethod
+    def _realize_groups(groups) -> Dict[int, dict]:
+        """Materialize `_gather_device` groups into per-layer host payloads
+        (runs at transfer completion, after the copies landed)."""
+        out: Dict[int, dict] = {}
+        for g in groups:
+            k, v = np.asarray(g["k"]), np.asarray(g["v"])
+            for i, l in enumerate(g["layers"]):
+                out[l] = dict(k=k[i], v=v[i], n_tokens=g["n"])
         return out
 
-    def _gather_np(self, layer: int, sid: str, n_tokens: int) -> dict:
-        """Copy one (sid, layer)'s valid KV out of the pool into host numpy.
-        Only whole-allocation gathers exist; a truncated-copy caller would
-        silently get the full range, so reject the mismatch loudly."""
-        assert n_tokens == self.alloc[layer].seqs[sid].n_tokens, \
-            (sid, layer, n_tokens)
-        return self._gather_layers(sid, [layer])[layer]
+    def _launch_swap_to_host(self, sid: str, layers: List[int]) -> None:
+        """Launch the async device->host copy of ``layers`` and LEASE their
+        pages: the host dict gets `PendingPayload` futures now; pages
+        return to the free list and store accounting moves HBM->HOST only
+        when the copy lands (a failed or preempted transfer never loses
+        KV).  Zero-page layers complete inline."""
+        groups, empties = self._gather_device(sid, layers)
+        leases = {l: self.alloc[l].lease(sid) for l in layers}
+
+        def _bookkeep(done_layers):
+            for l, pages in leases.items():
+                if l in done_layers and pages:
+                    self.alloc[l].release(pages)
+            e = self._store_entry(sid)
+            if e is not None:
+                for l in done_layers:
+                    if l < e.n_layers and e.tier[l] == HBM:
+                        self.mgr.store.move_layer(sid, l, HOST)
+
+        for l, p in empties.items():
+            self.host[(sid, l)] = p
+        if empties:
+            _bookkeep(list(empties))
+        if not groups:
+            return
+
+        tr = Transfer(sid, OUT, [a for g in groups for a in (g["k"], g["v"])],
+                      nbytes=float(sum(g["k"].nbytes + g["v"].nbytes
+                                       for g in groups)))
+        pendings: Dict[int, PendingPayload] = {}
+        for g in groups:
+            for l in g["layers"]:
+                pendings[l] = PendingPayload(self.transfers, tr, l, g["n"])
+                self.host[(sid, l)] = pendings[l]
+
+        def _complete(t):
+            for l, pl in self._realize_groups(groups).items():
+                pendings[l].payload = pl
+                if self.host.get((sid, l)) is pendings[l]:
+                    self.host[(sid, l)] = pl
+            # copied bytes count when they LAND — a poisoned transfer
+            # moved nothing anywhere
+            self.stats["copied_bytes"] += t.nbytes
+            _bookkeep(list(pendings))
+
+        def _release(_t):
+            # cancelled on a live node (drop): the data is discarded but
+            # the leased pages must come home
+            for l, pages in leases.items():
+                if l in pendings and pages:
+                    self.alloc[l].release(pages)
+
+        tr.on_complete = _complete
+        tr.on_release = _release
+        self.transfers.launch(tr)
+
+    def _launch_scatter_in(self, sid: str, payloads: Dict[int, dict]) -> None:
+        """Launch the host->device copy of already-allocated layers as ONE
+        donating, bucket-padded scatter per token-count group and track it
+        as an in-flight inbound future.  The pools rebind immediately (the
+        device op is dispatched, not awaited); a consumer fences via
+        `transfers.fence(sid, IN)` — the residual wait IS the stall."""
+        import jax.numpy as jnp
+        c = self.cfg
+        groups: Dict[int, List[int]] = {}
+        for l, p in payloads.items():
+            if p["n_tokens"] > 0:
+                groups.setdefault(p["n_tokens"], []).append(l)
+        if not groups:
+            return
+        nbytes = 0.0
+        for n, ls in groups.items():
+            G, Gb, nb = len(ls), _bucket(len(ls)), _bucket(n)
+            li = np.zeros((Gb, 1), np.int32)
+            pg = np.full((Gb, nb), self.n_pages, np.int32)   # pad -> trash
+            off = np.zeros((Gb, nb), np.int32)
+            ks = np.zeros((Gb, nb, c.n_kv_heads, c.d_head), self.dtype)
+            vs = np.zeros_like(ks)
+            for i, l in enumerate(ls):
+                li[i, 0] = l
+                p, o = self._slots(l, sid, 0, n)
+                pg[i, :n] = p
+                off[i, :n] = o
+                ks[i, :n] = payloads[l]["k"]
+                vs[i, :n] = payloads[l]["v"]
+            self.k_pool, self.v_pool = self.model.scatter_paged(
+                self.k_pool, self.v_pool, jnp.asarray(li), jnp.asarray(pg),
+                jnp.asarray(off), jnp.asarray(ks), jnp.asarray(vs))
+            nbytes += float(ks[:G, :n].nbytes + vs[:G, :n].nbytes)
+        # the transfer must NOT hold the pools themselves: every subsequent
+        # step_paged/scatter_paged DONATES them, deleting the arrays under
+        # the in-flight future.  Track tiny sentinel slices instead — each
+        # is a fresh array produced FROM the scatter result (ready iff the
+        # scatter ran), and nothing ever donates it
+        sent = [self.k_pool[0, self.n_pages, 0, 0, 0],
+                self.v_pool[0, self.n_pages, 0, 0, 0]]
+
+        def _complete(t):
+            self.stats["copied_bytes"] += t.nbytes
+
+        self.transfers.launch(Transfer(sid, IN, sent, nbytes=nbytes,
+                                       on_complete=_complete))
 
     def _scatter_layers(self, sid: str, payloads: Dict[int, dict]) -> None:
-        """Allocate + copy many host-tier layers back into the stacked pool
-        with one host->device transfer per side.  All-or-nothing: if any
-        layer's pages don't fit, no allocator is touched (OutOfPages)."""
-        import jax.numpy as jnp
+        """Allocate + launch the copy of many host-tier layers back into
+        the stacked pool.  All-or-nothing: if any layer's pages don't fit,
+        no allocator is touched (OutOfPages)."""
         for l, p in payloads.items():
             a = self.alloc[l]
             need = a.pages_for(p["n_tokens"])
@@ -358,25 +529,7 @@ class RealBackend(Backend):
                                  f"have {len(a.free_list)}")
         for l, p in payloads.items():
             self.alloc[l].allocate(sid, p["n_tokens"])
-        groups: Dict[int, List[int]] = {}
-        for l, p in payloads.items():
-            if p["n_tokens"] > 0:
-                groups.setdefault(p["n_tokens"], []).append(l)
-        for n, ls in groups.items():
-            pg, off = (np.stack(x) for x in
-                       zip(*(self._slots(l, sid, 0, n) for l in ls)))
-            li = jnp.asarray(ls, jnp.int32)[:, None]
-            ks = jnp.asarray(np.stack([payloads[l]["k"] for l in ls]),
-                             self.dtype)
-            vs = jnp.asarray(np.stack([payloads[l]["v"] for l in ls]),
-                             self.dtype)
-            self.k_pool = self.k_pool.at[li, pg, off].set(ks)
-            self.v_pool = self.v_pool.at[li, pg, off].set(vs)
-            self.stats["copied_bytes"] += ks.nbytes + vs.nbytes
-
-    def _scatter_from_np(self, layer: int, sid: str, payload: dict) -> None:
-        """allocate + copy one host-tier layer back into the pool."""
-        self._scatter_layers(sid, {layer: payload})
+        self._launch_scatter_in(sid, payloads)
 
     def _extend_all(self, sid: str, n: int) -> None:
         """Grow every layer's allocation by n tokens, all-or-nothing."""
@@ -397,25 +550,30 @@ class RealBackend(Backend):
         return self.mgr.store.entries.get(sid)
 
     def _ensure_resident(self, sid: str) -> None:
-        """Swap in any host/disk-staged layers (all in one batched copy);
-        allocate missing ones."""
+        """Swap in any host/disk-staged layers (one launched batched copy);
+        allocate missing ones.  A layer that is neither resident, staged,
+        nor spooled while the session claims KV is LOST (e.g. poisoned by a
+        crash mid-transfer) — refuse loudly rather than serve phantom KV."""
+        st = self.seqs[sid]
         missing = [l for l in range(self.cfg.n_layers)
                    if sid not in self.alloc[l].seqs]
         if not missing:
             return
         payloads: Dict[int, dict] = {}
-        z = None
-        for l in missing:
-            payload = self.host.get((sid, l))
-            if payload is None and self.spool:
-                f = self.spool / f"{sid}.npz"
-                if z is None and f.exists():
-                    z = np.load(f)
-                if z is not None:
-                    payload = dict(k=z[f"k{l}"], v=z[f"v{l}"],
-                                   n_tokens=int(z["n_tokens"]))
-            if payload is not None:
-                payloads[l] = payload
+        with contextlib.ExitStack() as stack:
+            z = None
+            f = self.spool / f"{sid}.npz" if self.spool else None
+            for l in missing:
+                payload = self._host_payload(sid, l)
+                if payload is None and f is not None:
+                    if z is None and f.exists():
+                        z = stack.enter_context(np.load(f))
+                    if z is not None:
+                        payload = dict(k=z[f"k{l}"], v=z[f"v{l}"],
+                                       n_tokens=int(z["n_tokens"]))
+                if payload is not None:
+                    payloads[l] = payload
+
         def _store_to_hbm(ls):
             e = self._store_entry(sid)
             if e is None:
@@ -425,6 +583,10 @@ class RealBackend(Backend):
                     self.mgr.store.move_layer(sid, l, HBM)
 
         empty = [l for l in missing if l not in payloads]
+        if empty and st.n_kv > 0:
+            raise LostKV(
+                f"{sid}: layers {empty} of a {st.n_kv}-token session are "
+                f"unreachable in every tier — refusing to serve phantom KV")
         for l in empty:
             self.alloc[l].allocate(sid, 0)
         _store_to_hbm(empty)
@@ -459,11 +621,7 @@ class RealBackend(Backend):
                                            lane.start + lane.new_tokens])
         return ids
 
-    def plan_fits(self, lanes) -> bool:
-        """Mirror of step()'s all-or-nothing page check, without mutating:
-        per layer, the new KV slots of every lane (plus the full scatter of
-        any host/disk-staged layer a swapped-out lane brings back) must fit
-        the free list."""
+    def _plan_fits_now(self, lanes) -> bool:
         for l, a in enumerate(self.alloc):
             need = 0
             for ln in lanes:
@@ -482,8 +640,25 @@ class RealBackend(Backend):
                 return False
         return True
 
+    def plan_fits(self, lanes) -> bool:
+        """Mirror of step()'s all-or-nothing page check, without mutating.
+        Completed-but-unreaped transfers are reaped first; a shortfall with
+        swap-outs still in flight reclaims their leased pages (blocking)
+        before giving up — the pages exist, they are just mid-copy."""
+        self.transfers.poll()
+        if self._plan_fits_now(lanes):
+            return True
+        if self.transfers.pending_kind(OUT):
+            self.transfers.fence(kind=OUT)
+            return self._plan_fits_now(lanes)
+        return False
+
     def step(self, lanes, now) -> StepResult:
         import jax.numpy as jnp
+        # reap ready transfers BEFORE the timed region: a pending persist's
+        # np.savez is background work and must not inflate this step's
+        # measured duration (the TBT percentiles CI gates)
+        self.transfers.poll()
         t0 = time.perf_counter()
         # tier fetch first (timed: swap-ins during decode are stall, not
         # compute — they used to vanish from stall accounting entirely)
@@ -496,10 +671,22 @@ class RealBackend(Backend):
                 st = self.seqs[sid] = _SeqState(priority=ln.req.priority)
                 for a in self.alloc:
                     a.allocate(sid, 0)
-            self._ensure_resident(sid)
+            try:
+                self._ensure_resident(sid)
+            except OutOfPages:
+                # leased pages of draining swap-outs are reclaimable: fence
+                # them and retry before surfacing pressure to the engine
+                self.transfers.fence(kind=OUT)
+                self._ensure_resident(sid)
             e = self._store_entry(sid)
             if e is not None:
                 e.pinned = True      # serving: not migratable/evictable
+        # fence in-flight inbound futures (advisory prefetches launched in
+        # earlier steps, swap-ins launched just above): the wait measured
+        # here is the RESIDUAL transfer time the compute could not hide —
+        # ~0 when the advisory led admission by enough
+        for ln in lanes:
+            self.transfers.fence(sid=ln.req.session_id, kind=IN)
         t_resident = time.perf_counter()
 
         ids_by_lane = [self._lane_ids(ln) for ln in lanes]
@@ -509,14 +696,22 @@ class RealBackend(Backend):
                                  f"to process")
         sids = [ln.req.session_id for ln in lanes]
         # all-or-nothing growth across the whole mixed batch: check every
-        # layer before mutating any allocator
-        for a in self.alloc:
-            need = sum(a.pages_for(a.seqs[s].n_tokens + len(ids))
+        # layer before mutating any allocator (reclaiming in-flight
+        # swap-outs' leased pages once if the free lists run short)
+        def _shortfall(a):
+            return sum(a.pages_for(a.seqs[s].n_tokens + len(ids))
                        - len(a.seqs[s].pages)
-                       for s, ids in zip(sids, ids_by_lane))
-            if need > len(a.free_list):
-                raise OutOfPages(f"step: need {need} pages, "
-                                 f"have {len(a.free_list)}")
+                       for s, ids in zip(sids, ids_by_lane)) \
+                - len(a.free_list)
+        for attempt in (0, 1):
+            worst = max(_shortfall(a) for a in self.alloc)
+            if worst <= 0:
+                break
+            if attempt == 0 and self.transfers.pending_kind(OUT):
+                self.transfers.fence(kind=OUT)
+                continue
+            raise OutOfPages(f"step: need {worst} pages beyond the free "
+                             f"list")
         for sid, ids in zip(sids, ids_by_lane):
             self._extend_all(sid, len(ids))
 
@@ -586,26 +781,33 @@ class RealBackend(Backend):
     # -- preemption / lifecycle ---------------------------------------------
 
     def swap_out(self, sid: str, n_tokens: int) -> None:
-        """Copy every resident layer to the host tier (one batched
-        device->host transfer across all L layers) and free its pages."""
+        """LAUNCH the copy of every resident layer to the host tier (one
+        batched async device->host transfer across all L layers) and lease
+        its pages — non-blocking; pages come back to the free list when the
+        copy lands (or at an allocation-pressure reclaim).  Fences any
+        transfer this session already has in flight first: a victim
+        preempted mid-prefetch (or re-preempted while an earlier swap-out
+        drains) must order those copies before its pages are re-gathered."""
         st = self.seqs.get(sid)
         if st is None:
             return
+        # a PERSIST is gather-only and rides along undisturbed; IN/OUT
+        # must be ordered before this session's pages are re-gathered
+        for kind in (IN, OUT):
+            if self.transfers.pending_for(sid, kind):
+                self.transfers.fence(sid=sid, kind=kind)
         resident = [l for l in range(self.cfg.n_layers)
                     if sid in self.alloc[l].seqs]
-        payloads = self._gather_layers(sid, resident)
-        for l in resident:
-            self.host[(sid, l)] = payloads[l]
-            self.alloc[l].free(sid)
+        self._launch_swap_to_host(sid, resident)
         e = self._store_entry(sid)
         if e is not None:
             e.pinned = False         # preempted: fair game for migration
-            for l in range(e.n_layers):
-                if e.tier[l] == HBM:
-                    self.mgr.store.move_layer(sid, l, HOST)
         self.stats["swaps_out"] += 1
 
     def drop(self, sid: str) -> None:
+        # cancel in-flight transfers (reclaiming their leased pages): the
+        # session is gone, nothing should be installed or written for it
+        self.transfers.poison(sid=sid, release=True)
         for a in self.alloc:
             a.free(sid)
         for l in range(self.cfg.n_layers):
@@ -631,29 +833,54 @@ class RealBackend(Backend):
     # -- node-manager hooks (cooperative purge / advisory prefetch) ---------
 
     def evict_layer(self, sid: str, layer: int) -> None:
+        """Launch one layer's eviction copy (async; pages leased until it
+        lands).  The caller (cooperative purge) drains the batch once after
+        launching every victim layer — the copies overlap each other."""
         a = self.alloc[layer]
         if sid not in a.seqs or sid not in self.seqs:
             return
-        n = a.seqs[sid].n_tokens
-        if n > 0:
-            self.host[(sid, layer)] = self._gather_np(layer, sid, n)
-        a.free(sid)
+        self._launch_swap_to_host(sid, [layer])
         self.stats["layer_evictions"] += 1
 
-    def promote_layer(self, sid: str, layer: int) -> None:
-        if sid in self.alloc[layer].seqs:
-            return
-        payload = self.host.get((sid, layer))
-        if payload is None:
-            return
-        self._scatter_from_np(layer, sid, payload)   # may raise: keep payload
-        self.host.pop((sid, layer), None)
-        self.stats["layer_promotions"] += 1
+    def prefetch(self, sid: str, layers: List[int]) -> List[int]:
+        """Advisory-path swap-in, ENQUEUED ahead of admission: allocate
+        pages for as many of ``layers`` (in priority order) as physically
+        fit and launch ONE async host->device scatter for them.  By the
+        time the engine admits the session, `_ensure_resident` finds the
+        pages placed and only fences the in-flight future.  Returns the
+        launched prefix — an OutOfPages or unreachable payload cuts the
+        plan short (best-effort, never raises)."""
+        if sid not in self.seqs:
+            return []
+        payloads: Dict[int, dict] = {}
+        launched: List[int] = []
+        for l in layers:
+            if sid in self.alloc[l].seqs:
+                launched.append(l)       # already resident: placement holds
+                continue
+            p = self._host_payload(sid, l)
+            if p is None:
+                break                    # unreachable payload: stop the plan
+            try:
+                self.alloc[l].allocate(sid, p["n_tokens"])
+            except OutOfPages:
+                break                    # HBM physically full: plan cut short
+            payloads[l] = p
+            launched.append(l)
+        if payloads:
+            self._launch_scatter_in(sid, payloads)
+            for l in payloads:
+                self.host.pop((sid, l), None)
+                self.stats["layer_promotions"] += 1
+        return launched
 
     def persist(self, sid: str) -> bool:
-        """Disk write-through: one complete copy on the slowest tier.
-        Returns False (no persistent copy) when there is no spool or a
-        layer is unreachable — the store must not claim the invariant."""
+        """Disk write-through, launched asynchronously: the device->host
+        gather of every resident layer starts now; the .npz lands when the
+        transfer completes at a drain point.  Returns False (no persistent
+        copy claimable) when there is no spool or a layer is unreachable.
+        Recovery is gated on the physically written file, so a crash that
+        poisons the in-flight write can never fake durability."""
         if self.spool is None or sid not in self.seqs:
             return False
         st = self.seqs[sid]
@@ -665,32 +892,53 @@ class RealBackend(Backend):
                 staged.append(l)
             else:
                 return False               # a layer is unreachable: no copy
+        groups, empties = self._gather_device(sid, resident)
+        staged_refs = {l: self.host[(sid, l)] for l in staged}
         # the pending token has no KV anywhere — it must ride along in the
         # spool or a post-crash recovery cannot resume the sequence
-        arrs = dict(n_tokens=np.int64(0),
-                    last_token=np.int64(-1 if st.last_token is None
-                                        else st.last_token),
-                    priority=np.int64(st.priority))
-        payloads = self._gather_layers(sid, resident)  # one batched copy
-        payloads.update({l: self.host[(sid, l)] for l in staged})
-        ns = {p["n_tokens"] for p in payloads.values()}
-        assert len(ns) == 1, f"{sid}: per-layer n_tokens diverge: {ns}"
-        arrs["n_tokens"] = np.int64(ns.pop())
-        for l, p in payloads.items():
-            arrs[f"k{l}"] = p["k"]
-            arrs[f"v{l}"] = p["v"]
-        np.savez(self.spool / f"{sid}.npz", **arrs)
-        self.stats["disk_writes"] += 1
+        last_token = -1 if st.last_token is None else st.last_token
+        priority = st.priority
+        path = self.spool / f"{sid}.npz"
+
+        def _complete(t):
+            payloads: Dict[int, dict] = dict(empties)
+            payloads.update(self._realize_groups(groups))
+            self.stats["copied_bytes"] += t.nbytes
+            for l, p in staged_refs.items():
+                if isinstance(p, PendingPayload):
+                    p = p.get()
+                    if p is None:
+                        return             # staged layer lost: abort write
+                payloads[l] = p
+            ns = {p["n_tokens"] for p in payloads.values()}
+            assert len(ns) == 1, f"{sid}: per-layer n_tokens diverge: {ns}"
+            arrs = dict(n_tokens=np.int64(ns.pop()),
+                        last_token=np.int64(last_token),
+                        priority=np.int64(priority))
+            for l, p in payloads.items():
+                arrs[f"k{l}"] = p["k"]
+                arrs[f"v{l}"] = p["v"]
+            np.savez(path, **arrs)
+            self.stats["disk_writes"] += 1
+
+        self.transfers.launch(Transfer(
+            sid, PERSIST, [a for g in groups for a in (g["k"], g["v"])],
+            on_complete=_complete,
+            nbytes=float(sum(g["k"].nbytes + g["v"].nbytes for g in groups))))
         return True
 
     # -- peer migration (the advisory path, real copies) --------------------
 
     def export_session(self, sid: str) -> Optional[dict]:
-        """Detach a session into host-format payload (for peer migration)."""
+        """Detach a session into host-format payload (for peer migration).
+        The handoff fences this session's in-flight transfers — bytes must
+        physically exist before they can cross nodes, so a source crash
+        after export can never poison the adopting node's copy."""
         st = self.seqs.get(sid)
         if st is None:
             return None
         self.swap_out(sid, st.n_kv)
+        self.transfers.fence(sid=sid)
         layers = {l: self.host.pop((sid, l))
                   for l in range(self.cfg.n_layers) if (sid, l) in self.host}
         self.seqs.pop(sid)
@@ -716,11 +964,18 @@ class RealBackend(Backend):
     def crash(self) -> None:
         """Node failure: the HBM pools and host staging tier are lost; the
         disk spool survives and is the recovery substrate
-        (`recover_session` on this backend, driven by a live peer)."""
+        (`recover_session` on this backend, driven by a live peer).
+        In-flight transfers are POISONED, not resolved — a gather that was
+        mid-copy installs nothing, a pending .npz write never happens —
+        so no phantom KV can outlive the node."""
+        self.transfers.poison()
         self.alloc = [PagedAllocator(self.n_pages, self.page_size)
                       for _ in range(self.cfg.n_layers)]
         self.host.clear()
         self.seqs.clear()
+
+    def spool_exists(self, sid: str) -> bool:
+        return self.spool is not None and (self.spool / f"{sid}.npz").exists()
 
     def recover_session(self, sid: str) -> Optional[dict]:
         """Rebuild a migration-format payload from this node's disk spool
@@ -731,14 +986,14 @@ class RealBackend(Backend):
         f = self.spool / f"{sid}.npz"
         if not f.exists():
             return None
-        z = np.load(f)
-        n = int(z["n_tokens"])
-        layers = {l: dict(k=z[f"k{l}"], v=z[f"v{l}"], n_tokens=n)
-                  for l in range(self.cfg.n_layers)}
+        with np.load(f) as z:
+            n = int(z["n_tokens"])
+            layers = {l: dict(k=z[f"k{l}"], v=z[f"v{l}"], n_tokens=n)
+                      for l in range(self.cfg.n_layers)}
+            last = int(z["last_token"]) if "last_token" in z.files else -1
+            prio = int(z["priority"]) if "priority" in z.files else 0
         self.stats["copied_bytes"] += sum(
             p["k"].nbytes + p["v"].nbytes for p in layers.values())
-        last = int(z["last_token"]) if "last_token" in z.files else -1
-        prio = int(z["priority"]) if "priority" in z.files else 0
         f.unlink()
         return dict(layers=layers, n_kv=n,
                     last_token=None if last < 0 else last, priority=prio)

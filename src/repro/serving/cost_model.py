@@ -133,6 +133,20 @@ class CostModel:
 
     # -- transfers ---------------------------------------------------------------------
 
+    def overlap_stall(self, transfer_remaining: float,
+                      compute_available: float) -> float:
+        """The explicit transfer/compute overlap model (SS3.3), shared by
+        both backends: a tier transfer stalls the critical path only where
+        it extends past the compute it can hide behind —
+
+            stall = max(0, transfer_remaining - compute_available).
+
+        The simulator applies it per layer inside `NodeManager.kv_stall`;
+        the real backend realizes the same quantity physically, as the
+        measured residual wait when it fences an in-flight transfer future
+        before consuming its KV (serving/transfer.py)."""
+        return max(0.0, transfer_remaining - compute_available)
+
     def transfer_time(self, nbytes: float, kind: str) -> float:
         hw = self.hw
         bw = {"h2d": hw.d2h_bw, "d2h": hw.d2h_bw,

@@ -46,6 +46,7 @@ from repro.core.node_manager import NodeManager
 from repro.serving.backend import Backend, LaneWork, SimBackend, StepResult
 from repro.serving.cost_model import CostModel
 from repro.serving.kv_cache import OutOfPages
+from repro.serving.transfer import OUT
 
 
 @dataclass
@@ -108,6 +109,11 @@ class NodeEngine:
     def step(self, now: float) -> float:
         """Run one token-budget iteration; returns its duration (sim or
         wall seconds)."""
+        # reap finished async tier transfers (non-blocking): swap-outs and
+        # prefetches launched in earlier iterations drained while compute
+        # ran — their bookkeeping (page release, host installs, deferred
+        # disk writes) lands here, off every lane's critical path
+        self.backend.poll_transfers()
         budget = self.token_budget
         plan: List[Tuple[Running, LaneWork]] = []
         # 1) running lanes ride every step: decode lanes cost no budget,
@@ -214,6 +220,10 @@ class NodeEngine:
                 self.mgr.on_memory_pressure(
                     self.kv_in_use() + planned + need - hbm, now, protect)
                 if self.kv_in_use() + planned + need > hbm:
+                    # leased pages of still-draining swap-outs are
+                    # reclaimable capacity: fence them before giving up
+                    self.backend.drain_transfers(OUT)
+                if self.kv_in_use() + planned + need > hbm:
                     if _skip():          # blocked head: bounded lookahead
                         continue
                     break
@@ -281,7 +291,12 @@ class NodeEngine:
         req = victim.req
         if self.swap_on_preempt:
             # swap out: consumed KV kept; an in-flight prompt resumes from
-            # its chunk boundary (only the unconsumed tail stays prompt)
+            # its chunk boundary (only the unconsumed tail stays prompt).
+            # The backend launches the copy asynchronously — fencing any
+            # transfer the victim already has in flight (a lane preempted
+            # mid-prefetch, or re-preempted while an earlier swap-out
+            # drains) — and leases the pages until it lands, so the next
+            # dispatch launches while the victim's KV is still draining
             req.cached_tokens = victim.ctx_tokens
             if victim.prompt_left > 0 and req.prompt_ids is not None:
                 req.prompt_ids = list(req.prompt_ids[victim.consumed:])

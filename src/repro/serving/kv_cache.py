@@ -38,7 +38,11 @@ class PagedAllocator:
         self.page_size = page_size
         self.free_list: List[int] = list(range(n_pages - 1, -1, -1))
         self.seqs: Dict[str, SeqAlloc] = {}
-        self.stats = dict(allocs=0, frees=0, peak_used=0)
+        # pages removed from a sequence but still physically held by an
+        # in-flight device->host transfer (serving/transfer.py): neither
+        # owned nor free until release()
+        self.leased: set = set()
+        self.stats = dict(allocs=0, frees=0, peak_used=0, leases=0)
 
     # -- capacity ----------------------------------------------------------------
 
@@ -88,6 +92,25 @@ class PagedAllocator:
         self.stats["frees"] += len(s.pages)
         return len(s.pages)
 
+    def lease(self, seq_id: str) -> List[int]:
+        """Detach a sequence whose pages an in-flight transfer still reads:
+        the sequence disappears from the table, but its pages stay out of
+        the free list until `release()` — a swap-out that has not completed
+        must never have its source pages handed to another sequence."""
+        s = self.seqs.pop(seq_id, None)
+        if s is None:
+            return []
+        self.leased.update(s.pages)
+        self.stats["leases"] += len(s.pages)
+        return list(s.pages)
+
+    def release(self, pages: List[int]) -> None:
+        """Return leased pages to the free list (transfer completed)."""
+        assert self.leased.issuperset(pages), "releasing a non-leased page"
+        self.leased.difference_update(pages)
+        self.free_list.extend(reversed(pages))
+        self.stats["frees"] += len(pages)
+
     def truncate(self, seq_id: str, n_tokens: int) -> None:
         """Release tail pages (e.g. after demoting part of a session)."""
         s = self.seqs[seq_id]
@@ -123,6 +146,7 @@ class PagedAllocator:
 
     def check(self) -> None:
         owned = [p for s in self.seqs.values() for p in s.pages]
-        assert len(owned) == len(set(owned)), "double-owned page"
-        assert len(owned) + len(self.free_list) == self.n_pages, "leak"
-        assert set(owned).isdisjoint(self.free_list), "freed-in-use page"
+        held = owned + list(self.leased)
+        assert len(held) == len(set(held)), "double-owned page"
+        assert len(held) + len(self.free_list) == self.n_pages, "leak"
+        assert set(held).isdisjoint(self.free_list), "freed-in-use page"

@@ -234,6 +234,12 @@ class ClusterRuntime:
 
         while eq:
             now, _, kind, payload = heapq.heappop(eq)
+            # background drain: reap any tier transfer whose copy finished
+            # (non-blocking; sim backends no-op) — launched spool writes and
+            # swap-outs land as the event loop makes progress, not only
+            # when their owning engine happens to step
+            for b in self.backends.values():
+                b.poll_transfers()
             while next_sample <= now:
                 load_samples.append(
                     [self.engines[i].load for i in sorted(self.engines)])
@@ -435,8 +441,13 @@ class ClusterRuntime:
 
     def _fail(self, i: int, now: float, schedule_node) -> None:
         self.sched.mark_failed(i)
-        self.managers[i].crash()
+        # poison first, account second: the backend kills its in-flight
+        # transfers (mid-copy gathers install nothing, pending spool writes
+        # never happen), then the manager drops sessions whose disk
+        # write-through had not completed by the crash instant — an
+        # interrupted transfer must resolve to LOST, never to phantom KV
         self.backends[i].crash()
+        self.managers[i].crash(now)
         self._dead.add(i)
         eng = self.engines[i]
         stranded = [r.req if hasattr(r, "req") else r

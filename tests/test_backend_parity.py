@@ -142,14 +142,20 @@ def test_cooperative_evict_then_promote_preserves_kv():
 
 def test_disk_spool_recovers_lost_host_tier(tmp_path):
     """Persistent-copy invariant, for real: after a disk write-through the
-    host tier can be lost entirely and the session still resumes bit-true."""
+    host tier can be lost entirely and the session still resumes bit-true.
+    Persist and swap-out only LAUNCH their copies now — losing the host
+    tier "for real" requires draining the in-flight transfers first (an
+    undrained loss is the crash path, covered by test_transfer_engine)."""
     cfg, model, params, mgr, be, eng = _setup("gqa", spool_dir=str(tmp_path))
     turns = _turns(cfg, (12, 6), seed=5)
     want, _ = _dense_reference(cfg, model, params, turns)
     got = [_serve(eng, be, turns[:1])[0]]
-    be.persist("s0")
+    assert be.persist("s0")
+    assert not (tmp_path / "s0.npz").exists()   # launched, not yet landed
+    be.drain_transfers()
     assert (tmp_path / "s0.npz").exists()
     be.swap_out("s0", be.session_tokens("s0"))
+    be.drain_transfers()                      # host copies land, pages free
     be.host.clear()                           # simulate losing the fast tiers
     got.append(_serve(eng, be, turns[1:])[0])
     assert got == want

@@ -120,6 +120,7 @@ def test_advisory_promotion_into_full_hbm_is_best_effort_real():
     while eng.waiting or eng.running:
         now += eng.step(now)
     be.swap_out("s0", be.session_tokens("s0"))    # all layers -> host tier
+    be.drain_transfers()                          # copies land, pages free
     # physically hog the page pools — room for layer 0 only.  This is
     # fragmentation the byte-level store cannot see, so promotion_plan
     # still proposes every layer

@@ -16,7 +16,8 @@ from repro.serving.kv_cache import OutOfPages, PagedAllocator
 # ---------------------------------------------------------------------------
 
 ALLOC_OP = st.tuples(
-    st.sampled_from(["alloc", "extend", "truncate", "free", "tables"]),
+    st.sampled_from(["alloc", "extend", "truncate", "free", "tables",
+                     "lease", "release"]),
     st.integers(0, 5),           # session index
     st.integers(0, 30),          # token count argument
 )
@@ -27,6 +28,7 @@ ALLOC_OP = st.tuples(
 def test_allocator_state_machine(ops):
     a = PagedAllocator(n_pages=24, page_size=4)
     model = {}                                    # sid -> expected n_tokens
+    leases = []                                   # in-flight transfer pages
     for op, sid_i, tok in ops:
         sid = f"s{sid_i}"
         try:
@@ -42,6 +44,14 @@ def test_allocator_state_machine(ops):
             elif op == "free":
                 a.free(sid)
                 model.pop(sid, None)
+            elif op == "lease" and sid in a.seqs:
+                # async swap-out launch: sequence gone, pages held
+                pages = a.lease(sid)
+                assert len(pages) == a.pages_for(model.pop(sid))
+                leases.append(pages)
+            elif op == "release" and leases:
+                # transfer completion: leased pages come home
+                a.release(leases.pop(tok % len(leases)))
             elif op == "tables" and a.seqs:
                 sids = sorted(a.seqs)
                 tbl = a.batch_block_tables(sids)
@@ -52,7 +62,8 @@ def test_allocator_state_machine(ops):
             # failed op must not have mutated anything
             pass
         a.check()
-        assert a.used_pages == sum(len(s.pages) for s in a.seqs.values())
+        assert a.used_pages == sum(len(s.pages) for s in a.seqs.values()) \
+            + sum(len(p) for p in leases)
         for sid2, n in model.items():
             s = a.seqs[sid2]
             assert s.n_tokens == n

@@ -1,0 +1,462 @@
+"""Async tier-transfer engine: overlap correctness under churn.
+
+The transfer engine (serving/transfer.py) makes every tier movement a
+launched future — swap-outs lease their pages until the copy lands,
+advisory prefetches scatter ahead of admission, disk persists defer their
+npz write to a drain point, and a crash POISONS whatever is still in
+flight.  These tests drive the paths where that asynchrony could corrupt
+state:
+
+* a lane preempted while its swap-out is still draining (and re-admitted
+  mid-flight) must stay token-exact, with allocator/store invariants
+  (`check()`) holding at every drain point;
+* a node crash mid-transfer must resolve every in-flight future to LOST —
+  no host payload, no spool file, no store accounting — and recovery must
+  reject a stale spool snapshot rather than serve phantom KV (sim + real);
+* the advisory-led swap-in must leave only a residual stall ~0 on the
+  admitting step (the acceptance criterion), with identical
+  prefetches/swaps_in counters and the same ~0 stall on the SimBackend
+  (sim/real parity by construction via `CostModel.overlap_stall`);
+* the prefetch scatter must DONATE the pool buffers (live-buffer census:
+  peak stays one stacked pool per side).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.advisory import AdvisoryRequest, InferenceRequest
+from repro.core.memory import DISK, HBM, HOST
+from repro.core.node_manager import NodeManager
+from repro.models.registry import get_model
+from repro.serving.backend import LostKV, RealBackend, SimBackend
+from repro.serving.cost_model import CostModel, HardwareSpec
+from repro.serving.engine import NodeEngine
+from repro.serving.transfer import IN, OUT, PERSIST
+
+GEN = 6
+CFG = get_config("llama3-8b").reduced(dtype="float32")
+MODEL = get_model(CFG)
+PARAMS = MODEL.init(jax.random.key(0))
+
+
+def _node(n_pages=32, page_size=8, spool_dir=None, **engine_kw):
+    cost = CostModel(CFG, HardwareSpec(chips_per_replica=1))
+    cost.set_param_count(MODEL.param_count())
+    mgr = NodeManager(0, CFG, cost)
+    be = RealBackend(CFG, MODEL, PARAMS, mgr=mgr, n_pages=n_pages,
+                     page_size=page_size, spool_dir=spool_dir)
+    eng = NodeEngine(0, CFG, cost, mgr, max_batch=4, backend=be,
+                     **engine_kw)
+    return cost, mgr, be, eng
+
+
+def _turns(lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(0, CFG.vocab, n))) for n in lens]
+
+
+def _dense_reference(turns, gen=GEN):
+    prefill = jax.jit(MODEL.prefill)
+    decode = jax.jit(MODEL.decode_step)
+    history, out = [], []
+    for t in turns:
+        history = history + list(t)
+        logits, cache = prefill(PARAMS, jnp.asarray([history], jnp.int32))
+        cache = MODEL.grow_cache(cache, gen)
+        outs = []
+        for _ in range(gen):
+            nxt = jnp.argmax(logits[:, :CFG.vocab], -1).astype(jnp.int32)
+            outs.append(int(nxt[0]))
+            logits, cache = decode(PARAMS, cache, nxt)
+        out.append(outs)
+        history = history + outs
+    return out
+
+
+def _check_invariants(mgr, be):
+    for a in be.alloc:
+        a.check()
+    mgr.store.check()
+
+
+def _serve_to_end(eng, req, mgr, be, now=0.0, hook=None):
+    eng.submit(req)
+    while eng.waiting or eng.running:
+        now += eng.step(now)
+        _check_invariants(mgr, be)       # every step edge is a drain point
+        if hook is not None:
+            hook(now)
+    return now
+
+
+# --------------- async swap-out: leases, pendings, drain --------------------
+
+def test_swap_out_leases_pages_until_drain():
+    cost, mgr, be, eng = _node()
+    turns = _turns((12,), seed=1)
+    req = InferenceRequest("s0", prompt_tokens=12, max_new_tokens=GEN,
+                           prompt_ids=list(turns[0]))
+    _serve_to_end(eng, req, mgr, be)
+    pages_used = be.alloc[0].used_pages
+    be.swap_out("s0", be.session_tokens("s0"))
+    # launched, not completed: pages are leased (still physically held),
+    # the host tier holds futures, store accounting still says HBM
+    assert be.transfers.pending_for("s0", OUT)
+    assert all("s0" not in a.seqs for a in be.alloc)
+    assert be.alloc[0].used_pages == pages_used
+    assert len(be.alloc[0].leased) > 0
+    _check_invariants(mgr, be)
+    assert mgr.store.hbm_resident_layers("s0") == CFG.n_layers
+    be.drain_transfers()
+    # landed: pages free, payloads realized, accounting moved to host
+    assert be.alloc[0].used_pages == 0 and not be.alloc[0].leased
+    assert isinstance(be.host[("s0", 0)], dict)
+    assert mgr.store.hbm_resident_layers("s0") == 0
+    _check_invariants(mgr, be)
+
+
+@pytest.mark.parametrize("drain_between", [False, True])
+def test_preempt_with_swap_out_in_flight_token_exact(drain_between):
+    """Preempt a lane mid-decode and re-admit it while (or after) its
+    swap-out transfer drains: the re-admission fences the in-flight copy
+    through the pending-payload future and the output stays token-exact."""
+    cost, mgr, be, eng = _node(n_pages=48)
+    turns = _turns((11, 9), seed=3)
+    want = _dense_reference(turns)
+    got, now = [], 0.0
+    for i, t in enumerate(turns):
+        req = InferenceRequest("s0", prompt_tokens=len(t),
+                               max_new_tokens=GEN, prompt_ids=list(t),
+                               cached_tokens=be.session_tokens("s0"))
+        state = dict(preempted=False)
+
+        def hook(_now):
+            if (i == 1 and not state["preempted"] and eng.running
+                    and req.generated >= GEN // 2):
+                eng.preempt_one(_now)
+                # the victim's swap-out is IN FLIGHT; the next engine step
+                # re-admits it against the pending payloads
+                assert drain_between or be.transfers.pending_for("s0", OUT)
+                if drain_between:
+                    be.drain_transfers()
+                _check_invariants(mgr, be)
+                state["preempted"] = True
+
+        now = _serve_to_end(eng, req, mgr, be, now, hook)
+        got.append(req.output_ids)
+    assert got == want, (got, want)
+    assert be.stats["swaps_out"] >= 1 and be.stats["swaps_in"] >= 1
+    assert be.transfers.stats["completed"] == be.transfers.stats["launched"]
+
+
+def test_churn_under_page_pressure_reclaims_leases():
+    """Two sessions on a pool only big enough for one force swap-out /
+    swap-in churn; in-flight leases must be reclaimed (fenced) rather than
+    deadlock admission, and every session stays token-exact."""
+    # 12/13-token prompts + 6 generated tokens need 3 pages/layer each at
+    # page 8; a 5-page pool admits both but cannot hold their growth
+    cost, mgr, be, eng = _node(n_pages=5, page_size=8, token_budget=8)
+    rng = np.random.default_rng(7)
+    prompts = {f"s{i}": list(map(int, rng.integers(0, CFG.vocab, 12 + i)))
+               for i in range(2)}
+    want = {s: _dense_reference([p])[0] for s, p in prompts.items()}
+    reqs = {}
+    for s, p in prompts.items():
+        reqs[s] = InferenceRequest(session_id=s, prompt_tokens=len(p),
+                                   max_new_tokens=GEN, prompt_ids=list(p))
+        eng.submit(reqs[s])
+    now = 0.0
+    while eng.waiting or eng.running:
+        now += eng.step(now)
+        _check_invariants(mgr, be)
+    for s in prompts:
+        assert reqs[s].output_ids == want[s], s
+    assert eng.stats["preemptions"] >= 1      # churn actually happened
+
+
+# --------------- crash mid-transfer: poison, never phantom ------------------
+
+def test_crash_poisons_inflight_persist_and_swap_out(tmp_path):
+    cost, mgr, be, eng = _node(spool_dir=str(tmp_path))
+    req = InferenceRequest("s0", prompt_tokens=10, max_new_tokens=GEN,
+                           prompt_ids=list(_turns((10,), seed=4)[0]))
+    _serve_to_end(eng, req, mgr, be)
+    assert be.persist("s0")                       # launched ...
+    be.swap_out("s0", be.session_tokens("s0"))    # ... both in flight
+    assert be.transfers.pending_for("s0", PERSIST)
+    assert be.transfers.pending_for("s0", OUT)
+    be.crash()
+    # nothing landed anywhere: no npz, no host payloads, no recovery claim
+    assert not (tmp_path / "s0.npz").exists()
+    assert be.host == {} and be.seqs == {}
+    assert be.recover_session("s0") is None
+    assert be.transfers.pending == 0
+    assert be.transfers.stats["poisoned"] == 2
+    for a in be.alloc:
+        a.check()
+
+
+def test_recovery_rejects_stale_spool_snapshot(tmp_path):
+    """Turn 1 persisted durably; turn 2's write-through dies in flight with
+    the node.  The dead store still advertises a disk copy, but the spool
+    physically holds the TURN-1 snapshot — recovery must detect the stale
+    token count and fall back to recompute, never serve truncated KV."""
+    cost, mgr, be, eng = _node(spool_dir=str(tmp_path / "dead"))
+    turns = _turns((12, 6), seed=5)
+    now = _serve_to_end(eng, InferenceRequest(
+        "s0", prompt_tokens=12, max_new_tokens=GEN,
+        prompt_ids=list(turns[0])), mgr, be)
+    mgr.flush_session("s0", now)
+    be.drain_transfers()                          # turn-1 npz lands
+    assert (tmp_path / "dead" / "s0.npz").exists()
+    now = _serve_to_end(eng, InferenceRequest(
+        "s0", prompt_tokens=6, max_new_tokens=GEN,
+        prompt_ids=list(turns[1]),
+        cached_tokens=be.session_tokens("s0")), mgr, be, now)
+    mgr.flush_session("s0", now)                  # turn-2 write launched ...
+    tokens_after_turn2 = mgr.store.entries["s0"].n_tokens
+    be.crash()                                    # ... and poisoned
+    mgr.crash()                                   # accounting keeps on_disk
+    e = mgr.store.entries["s0"]
+    assert e.on_disk and e.n_tokens == tokens_after_turn2
+    cost2 = CostModel(CFG, HardwareSpec(chips_per_replica=1))
+    cost2.set_param_count(MODEL.param_count())
+    mgr2 = NodeManager(1, CFG, cost2)
+    RealBackend(CFG, MODEL, PARAMS, mgr=mgr2, n_pages=32, page_size=8,
+                spool_dir=str(tmp_path / "live"))
+    assert not mgr2.recover_from_spool("s0", mgr, now=now + 1.0)
+    assert "s0" not in mgr2.store.entries         # nothing phantom admitted
+    mgr2.store.check()
+
+
+def test_sim_crash_mid_disk_write_poisons_entry():
+    """Simulator failure injection resolves or poisons in-flight disk
+    write-throughs by completion time: a crash before the modeled write
+    lands drops the session (no durable copy), after it demotes to DISK."""
+    cost = CostModel(CFG, HardwareSpec(chips_per_replica=1))
+    for crash_at, survives in ((None, True), (0.0, False), (1e9, True)):
+        m = NodeManager(0, CFG, cost)
+        m.store.admit("s0", n_tokens=64, bytes_per_layer=1 << 20,
+                      n_layers=CFG.n_layers, tier=HBM)
+        m.flush_session("s0", now=0.0)
+        assert m.store.entries["s0"].on_disk
+        assert m.disk_done["s0"] > 0.0
+        m.crash(crash_at)
+        if survives:
+            e = m.store.entries["s0"]
+            assert all(t == DISK for t in e.tier)
+        else:
+            assert "s0" not in m.store.entries
+        m.store.check()
+
+
+def test_poisoned_payload_raises_lost_kv_not_phantom():
+    """A session whose only KV copy was in a poisoned transfer must fail
+    LOUDLY at the next serve attempt, not silently serve made-up KV."""
+    cost, mgr, be, eng = _node()
+    req = InferenceRequest("s0", prompt_tokens=10, max_new_tokens=GEN,
+                           prompt_ids=list(_turns((10,), seed=8)[0]))
+    _serve_to_end(eng, req, mgr, be)
+    be.swap_out("s0", be.session_tokens("s0"))
+    be.transfers.poison(release=True)             # the copy never landed
+    req2 = InferenceRequest("s0", prompt_tokens=4, max_new_tokens=2,
+                            prompt_ids=[1, 2, 3, 4],
+                            cached_tokens=be.session_tokens("s0"))
+    eng.submit(req2)
+    with pytest.raises(LostKV):
+        eng.step(0.0)
+
+
+def test_real_cluster_crash_mid_transfer_token_exact():
+    """Cluster-level crash-mid-transfer: the full failure scenario stays
+    token-exact with async migration — in-flight transfers on the dead
+    node are poisoned and the runtime recovers from spool or recomputes."""
+    from repro.serving.scenario import (MultiTurnRealTrace, dense_reference,
+                                        session_outputs)
+    from repro.serving.simulator import ClusterRuntime
+    rt = ClusterRuntime(CFG, n_nodes=3, policy="symphony",
+                        hw=HardwareSpec(chips_per_replica=1), max_batch=4,
+                        mode="real", model=MODEL, params=PARAMS,
+                        n_pages=48, page_size=8)
+    trace = MultiTurnRealTrace(CFG, n_sessions=2, n_turns=3, prompt_len=8,
+                               gen=4, seed=11, fail_after_turn=2)
+    try:
+        res = rt.run(trace)
+        got = session_outputs(res)
+        want = dense_reference(CFG, MODEL, PARAMS, trace.prompts, 4)
+        assert got == want, (got, want)
+        for i, be in rt.backends.items():
+            be.drain_transfers()      # reap anything the last event launched
+            assert be.transfers.pending == 0
+            for a in be.alloc:
+                a.check()
+        for mgr in rt.managers.values():
+            mgr.store.check()
+    finally:
+        rt.cleanup()
+
+
+# --------------- the acceptance criterion: residual stall ~ 0 ---------------
+
+def test_advisory_prefetch_leaves_residual_stall_only():
+    """With an advisory leading admission by >= one step, the swap-in
+    lane's measured stall is ~0 vs the cold path paying the full copy."""
+    cost, mgr, be, eng = _node(n_pages=96, page_size=8)
+    rng = np.random.default_rng(2)
+    now = _serve_to_end(eng, InferenceRequest(
+        "vip", prompt_tokens=256, max_new_tokens=4,
+        prompt_ids=list(map(int, rng.integers(0, CFG.vocab, 256)))),
+        mgr, be)
+    # a background lane keeps steps flowing while the prefetch drains
+    bg = InferenceRequest("bg", prompt_tokens=8, max_new_tokens=200,
+                          prompt_ids=list(map(int, rng.integers(
+                              0, CFG.vocab, 8))))
+    eng.submit(bg)
+    for _ in range(4):
+        now += eng.step(now)
+
+    def turn(lead_steps):
+        nonlocal now
+        be.swap_out("vip", be.session_tokens("vip"))
+        be.drain_transfers()
+        stall0 = eng.stats["stall_s"]
+        if lead_steps:
+            mgr.promote("vip", now)               # enqueue the prefetch
+            assert be.transfers.pending_for("vip", IN)
+            for _ in range(lead_steps):
+                now += eng.step(now)              # drains under compute
+        req = InferenceRequest("vip", prompt_tokens=4, max_new_tokens=2,
+                               prompt_ids=list(map(int, rng.integers(
+                                   0, CFG.vocab, 4))),
+                               cached_tokens=be.session_tokens("vip"))
+        eng.submit(req)
+        while any(r.req.session_id == "vip" for r in eng.running) \
+                or "vip" in [r.session_id for r in eng.waiting]:
+            now += eng.step(now)
+        return eng.stats["stall_s"] - stall0
+
+    turn(lead_steps=0)                            # warm the buckets
+    cold = turn(lead_steps=0)
+    warm = turn(lead_steps=2)
+    assert cold > 0
+    # residual ~0: generous absolute cap for CI noise, strict relative one
+    assert warm <= max(0.5 * cold, 0.005), (warm, cold)
+    assert mgr.stats["swaps_in"] >= 1
+    assert mgr.stats["promoted_layers"] >= CFG.n_layers
+
+
+def test_sim_real_stall_parity_and_counters():
+    """The same advisory-led scenario on both backends: stall ~ 0 on each
+    (the sim's `CostModel.overlap_stall` model and the real backend's
+    measured fence agree), and the manager's prefetches/swaps_in counters
+    are identical."""
+    # -- real ---------------------------------------------------------------
+    cost_r, mgr_r, be, eng_r = _node(n_pages=48)
+    t1 = _turns((24,), seed=9)[0]
+    now = _serve_to_end(eng_r, InferenceRequest(
+        "s0", prompt_tokens=24, max_new_tokens=4, prompt_ids=list(t1)),
+        mgr_r, be)
+    be.swap_out("s0", be.session_tokens("s0"))
+    be.drain_transfers()
+    # -- sim: same session shape, same placement history --------------------
+    cost_s = CostModel(CFG, HardwareSpec(chips_per_replica=1))
+    cost_s.set_param_count(MODEL.param_count())
+    mgr_s = NodeManager(0, CFG, cost_s)
+    eng_s = NodeEngine(0, CFG, cost_s, mgr_s, max_batch=4)
+    tokens = be.session_tokens("s0")
+    mgr_s.mark_resident("s0", tokens,
+                        cost_s.session_kv_bytes(tokens) / CFG.n_layers)
+    for l in range(CFG.n_layers):
+        mgr_s.store.move_layer("s0", l, HOST)
+
+    # the advisory leads the request on both nodes
+    lead = 1.0
+    for mgr in (mgr_r, mgr_s):
+        mgr.on_advisory(AdvisoryRequest(session_id="s0"), kv_node=None,
+                        now=now, to_hbm=True)
+    for _ in range(2):
+        now += eng_r.step(now) if eng_r.running else 0.0
+    assert mgr_r.stats["prefetches"] == mgr_s.stats["prefetches"] == 1
+    assert mgr_r.stats["swaps_in"] == mgr_s.stats["swaps_in"] == 1
+    assert mgr_r.stats["promoted_layers"] == mgr_s.stats["promoted_layers"] \
+        == CFG.n_layers
+
+    # real: serve the next turn, measured residual stall ~ 0
+    req_r = InferenceRequest("s0", prompt_tokens=4, max_new_tokens=2,
+                             prompt_ids=[1, 2, 3, 4],
+                             cached_tokens=be.session_tokens("s0"))
+    _serve_to_end(eng_r, req_r, mgr_r, be, now)
+    assert eng_r.stats["stall_s"] <= 0.05, eng_r.stats["stall_s"]
+
+    # sim: kv_stall after the lead is exactly zero (all fetches modeled
+    # complete); without the advisory the same serve would have stalled
+    step_time = cost_s.mixed_step_time([(4, tokens)], 0, 0)
+    assert mgr_s.kv_stall("s0", now + lead, step_time) == 0.0
+    mgr_cold = NodeManager(1, CFG, cost_s)
+    mgr_cold.mark_resident("s0", tokens,
+                           cost_s.session_kv_bytes(tokens) / CFG.n_layers)
+    for l in range(CFG.n_layers):
+        mgr_cold.store.move_layer("s0", l, HOST)
+    assert mgr_cold.kv_stall("s0", now + lead, step_time) > 0.0
+
+
+def test_back_to_back_prefetches_survive_pool_donation():
+    """Regression: an in-flight IN transfer must not hold the pool arrays
+    themselves — the next prefetch (or serving step) DONATES the pools,
+    deleting them under the future, and poll()/fence() would raise on the
+    deleted buffers.  Two prefetches launched back to back (no poll in
+    between) must drain cleanly and both sessions must stay token-exact."""
+    cost, mgr, be, eng = _node(n_pages=48)
+    turns = {s: _turns((10 + i,), seed=20 + i)[0]
+             for i, s in enumerate(("a", "b"))}
+    want = {s: _dense_reference([t, [9, 8, 7]]) for s, t in turns.items()}
+    now = 0.0
+    for s, t in turns.items():
+        now = _serve_to_end(eng, InferenceRequest(
+            s, prompt_tokens=len(t), max_new_tokens=GEN,
+            prompt_ids=list(t)), mgr, be, now)
+        be.swap_out(s, be.session_tokens(s))
+    be.drain_transfers()
+    mgr.promote("a", now)                 # IN transfer for "a" in flight...
+    mgr.promote("b", now)                 # ...pools donated by "b"'s scatter
+    assert be.transfers.pending >= 1
+    be.drain_transfers()                  # must not raise on deleted bufs
+    for s, t in turns.items():
+        req = InferenceRequest(s, prompt_tokens=3, max_new_tokens=GEN,
+                               prompt_ids=[9, 8, 7],
+                               cached_tokens=be.session_tokens(s))
+        now = _serve_to_end(eng, req, mgr, be, now)
+        assert req.output_ids == want[s][1], s
+
+
+# --------------- donation: peak memory stays 1x per side --------------------
+
+def test_prefetch_scatter_donates_pool_buffers():
+    """Live-buffer census: the swap-in scatter must alias (donate) the pool
+    buffers, never materialize a second full pool per side.  n_pages=37
+    gives this test a pool shape nothing else in the process uses."""
+    cost, mgr, be, eng = _node(n_pages=37)
+    req = InferenceRequest("s0", prompt_tokens=20, max_new_tokens=GEN,
+                           prompt_ids=list(_turns((20,), seed=6)[0]))
+    _serve_to_end(eng, req, mgr, be)
+    want_next = _dense_reference([_turns((20,), seed=6)[0], [5, 6, 7]])[1]
+    be.swap_out("s0", be.session_tokens("s0"))
+    be.drain_transfers()
+    k_old, v_old = be.k_pool, be.v_pool
+    mgr.promote("s0", now=1.0)                    # launches donating scatter
+    assert be.k_pool is not k_old
+    assert k_old.is_deleted() and v_old.is_deleted(), \
+        "scatter did not donate: a second full pool was live"
+    pools = [a for a in jax.live_arrays() if a.shape == be.k_pool.shape]
+    assert len(pools) == 2, f"{len(pools)} pool-sized buffers live"
+    be.drain_transfers()
+    assert be.compile_counts()["scatter"] >= 1
+    # and the donated round trip preserved the KV bit-exactly
+    req2 = InferenceRequest("s0", prompt_tokens=3, max_new_tokens=GEN,
+                            prompt_ids=[5, 6, 7],
+                            cached_tokens=be.session_tokens("s0"))
+    _serve_to_end(eng, req2, mgr, be, 2.0)
+    assert req2.output_ids == want_next
