@@ -422,6 +422,117 @@ def bench_interference(prompt_len: int = 4000, token_budget: int = 4,
     return out
 
 
+def bench_sharing(n_sessions: int = 1000, shared_len: int = 64,
+                  suffix_len: int = 3, gen: int = 2,
+                  kernel_mode: str = None):
+    """Prefix-sharing mode: the copy-on-write observable.
+
+    ``n_sessions`` single-turn sessions all carry the same ``shared_len``
+    system prompt plus a private ``suffix_len`` tail (the multi-tenant
+    workload prefix sharing targets).  The first session is served alone —
+    its pages become the cohort's indexed prefix — then the rest stream
+    through the engine, each adopting the shared span at admission instead
+    of prefilling it.  The headline is ``footprint_ratio``: peak physical
+    pages over the unshared ``n_sessions * pages_for(full context)`` cost.
+    Shared pages are counted ONCE however many sessions reference them, so
+    the footprint must stay SUBLINEAR in sessions — ~(shared_pages +
+    n_sessions * suffix_pages) / (n_sessions * total_pages), far below the
+    0.5 CI gate at these shapes.  ``parity_ok`` spot-checks a few cohort
+    members token-for-token against the dense reference: sharing must be a
+    pure memory optimization, never a decode change."""
+    from repro.configs import get_config
+    from repro.core.advisory import InferenceRequest
+    from repro.core.node_manager import NodeManager
+    from repro.models.registry import get_model
+    from repro.serving.backend import RealBackend
+    from repro.serving.cost_model import CostModel, HardwareSpec
+    from repro.serving.engine import NodeEngine
+
+    if kernel_mode is None:
+        kernel_mode = "auto" if jax.default_backend() == "tpu" else "ref"
+    cfg = get_config("llama3-8b").reduced(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+    cost.set_param_count(model.param_count())
+    mgr = NodeManager(0, cfg, cost)
+    page_size = 16
+    total_tok = shared_len + suffix_len + gen
+    pages_each = -(-total_tok // page_size)
+    shared_pages = -(-shared_len // page_size)
+    # shared prefix once + one private tail page per session + headroom
+    n_pages = shared_pages + n_sessions * (pages_each - shared_pages) + 64
+    be = RealBackend(cfg, model, params, n_pages=n_pages,
+                     page_size=page_size, mgr=mgr, trace_logits=False,
+                     kernel_mode=kernel_mode)
+    eng = NodeEngine(0, cfg, cost, mgr, max_batch=16, backend=be)
+    rng = np.random.default_rng(0)
+    shared = list(map(int, rng.integers(0, cfg.vocab, shared_len)))
+    sids = [f"u{i:04d}" for i in range(n_sessions)]
+    prompts = {sid: shared + list(map(int, rng.integers(0, cfg.vocab,
+                                                        suffix_len)))
+               for sid in sids}
+    reqs = {sid: InferenceRequest(session_id=sid,
+                                  prompt_tokens=len(prompts[sid]),
+                                  max_new_tokens=gen,
+                                  prompt_ids=list(prompts[sid]))
+            for sid in sids}
+    state = dict(now=0.0, peak=0)
+
+    def pump():
+        state["now"] += eng.step(state["now"])
+        state["peak"] = max(state["peak"], be.alloc[0].used_pages)
+
+    t0 = time.perf_counter()
+    eng.submit(reqs[sids[0]])            # the donor registers the prefix
+    while eng.waiting or eng.running:
+        pump()
+    for sid in sids[1:]:
+        eng.submit(reqs[sid])
+    while eng.waiting or eng.running:
+        pump()
+    wall = time.perf_counter() - t0
+
+    # dense-reference parity spot-check on a few cohort members
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    parity_ok = True
+    for sid in (sids[0], sids[1], sids[n_sessions // 2], sids[-1]):
+        logits, cache = prefill(params,
+                                jnp.asarray([prompts[sid]], jnp.int32))
+        cache = model.grow_cache(cache, gen)
+        outs = []
+        for _ in range(gen):
+            nxt = jnp.argmax(logits[:, :cfg.vocab], -1).astype(jnp.int32)
+            outs.append(int(nxt[0]))
+            logits, cache = decode(params, cache, nxt)
+        parity_ok = parity_ok and (reqs[sid].output_ids == outs)
+
+    unshared_pages = n_sessions * pages_each
+    out = dict(
+        n_sessions=n_sessions, shared_len=shared_len,
+        suffix_len=suffix_len, gen=gen, page_size=page_size,
+        kernel_mode=kernel_mode, pool_pages=n_pages,
+        peak_used_pages=state["peak"],
+        final_used_pages=be.alloc[0].used_pages,
+        unshared_pages=unshared_pages,
+        footprint_ratio=state["peak"] / unshared_pages,
+        prefix_hits=be.stats["prefix_hits"],
+        shared_tokens=be.stats["shared_tokens"],
+        cow_forks=be.stats["cow_forks"],
+        prefill_tokens=eng.stats["prefill_tokens"],
+        shared_prefix_tokens=eng.stats["shared_prefix_tokens"],
+        parity_ok=bool(parity_ok),
+        wall_s=wall,
+    )
+    emit("step.sharing.footprint_ratio", out["footprint_ratio"],
+         f"peak={state['peak']}p vs unshared={unshared_pages}p "
+         f"sessions={n_sessions} hits={out['prefix_hits']} "
+         f"shared_tok={out['shared_tokens']} parity_ok={parity_ok}")
+    save("BENCH_sharing", out)
+    return out
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -433,8 +544,12 @@ if __name__ == "__main__":
                     help="run just the long-prompt interference mode")
     ap.add_argument("--overlap-only", action="store_true",
                     help="run just the async swap-in overlap mode")
+    ap.add_argument("--sharing-only", action="store_true",
+                    help="run just the 1000-session prefix-sharing mode "
+                         "(emits the BENCH_sharing.json artifact)")
     ap.add_argument("--prompt-len", type=int, default=4000)
     ap.add_argument("--token-budget", type=int, default=4)
+    ap.add_argument("--sessions", type=int, default=1000)
     args = ap.parse_args()
     if args.interference_only:
         import json
@@ -443,6 +558,9 @@ if __name__ == "__main__":
     elif args.overlap_only:
         import json
         print(json.dumps(bench_overlap(), indent=1))
+    elif args.sharing_only:
+        import json
+        print(json.dumps(bench_sharing(n_sessions=args.sessions), indent=1))
     elif args.step:
         bench_step()
     else:

@@ -2,14 +2,17 @@
 table.  Prints ``name,us_per_call,derived`` CSV (ratios/fractions are scaled
 by 1e6 into the us column; the derived field says what they mean).
 
-``--serving`` aggregates the two serving artifacts
-(results/bench/BENCH_step.json + BENCH_cluster.json) into the top-level
+``--serving`` aggregates the serving artifacts
+(results/bench/BENCH_step.json + BENCH_cluster.json, plus
+BENCH_sharing.json when present) into the top-level
 ``results/bench/BENCH_serving.json`` scorecard: steady-state TBT
 median/p99, the long-prompt-interference TBT bound, the async swap-in
-overlap profile (advisory-led residual stall must stay ~0), cluster
+overlap profile (advisory-led residual stall must stay ~0), the
+prefix-sharing footprint ratio (peak pages over the unshared cost for a
+1000-session shared-system-prompt cohort — must stay sublinear), cluster
 throughput, compile counts, and copied bytes — the one file CI uploads and
 gates (decode-p99-under-interference must not regress vs the committed
-copy)."""
+copy; footprint ratio bounded absolutely)."""
 from __future__ import annotations
 
 import argparse
@@ -33,6 +36,9 @@ def aggregate_serving() -> dict:
                 f"first")
     step = json.loads(step_f.read_text())
     cluster = json.loads(cluster_f.read_text())
+    sharing_f = RESULTS / "BENCH_sharing.json"
+    sharing = json.loads(sharing_f.read_text()) if sharing_f.exists() \
+        else None      # optional locally; CI always emits it first
 
     cfgs = list(step["configs"].values())
     medians = sorted(c["decode_ms_median"] for c in cfgs
@@ -78,6 +84,16 @@ def aggregate_serving() -> dict:
             preemptions=sum(n.get("preemptions", 0)
                             for n in per_node.values()),
         ),
+        sharing=None if sharing is None else dict(
+            n_sessions=sharing.get("n_sessions"),
+            footprint_ratio=sharing.get("footprint_ratio"),
+            peak_used_pages=sharing.get("peak_used_pages"),
+            unshared_pages=sharing.get("unshared_pages"),
+            prefix_hits=sharing.get("prefix_hits"),
+            shared_tokens=sharing.get("shared_tokens"),
+            cow_forks=sharing.get("cow_forks"),
+            parity_ok=sharing.get("parity_ok"),
+        ),
         compile_counts=step.get("compile_counts", {}),
         copied_bytes=sum(c.get("copied_bytes", 0.0) for c in cfgs),
     )
@@ -101,7 +117,8 @@ def main() -> None:
 
     from benchmarks import fig_serving, fig_tokens
     from benchmarks.roofline_table import emit_roofline
-    from benchmarks.kernel_bench import bench_kernels, bench_step
+    from benchmarks.kernel_bench import (bench_kernels, bench_sharing,
+                                         bench_step)
 
     t0 = time.time()
     sections = {
@@ -127,6 +144,7 @@ def main() -> None:
         "roofline": emit_roofline,
         "kernels": bench_kernels,
         "step": bench_step,
+        "sharing": bench_sharing,
     }
     for name, fn in sections.items():
         if args.only and args.only != name:

@@ -15,14 +15,84 @@ mechanisms:
 Accounting is in bytes and layer units; the actual tensors (real mode) live
 in the owning runtime keyed by (session, layer) — this class is pure
 bookkeeping, shared verbatim by the simulator and the real engine.
+
+The store also owns the node's `PrefixIndex` (when serving in real mode):
+a chained hash of page-aligned token-id chunks -> (donor session, depth)
+that admission consults for longest-shared-prefix lookup, the entry point
+of cross-session copy-on-write KV sharing.  `drop()` is prefix-aware — a
+dropped session's index entries go with it, so a later admission can never
+adopt pages from a session the store no longer tracks.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 HBM, HOST, DISK = "hbm", "host", "disk"
 TIER_ORDER = (HBM, HOST, DISK)
+
+
+class PrefixIndex:
+    """Longest-shared-prefix index over page-aligned token-id chunks.
+
+    Each full page-size chunk of a registered session's token history is
+    hashed CHAINED on its predecessor — key(d) = hash(key(d-1), chunk d) —
+    so a single dict lookup at depth d certifies the entire d-page prefix,
+    not just the d-th chunk.  `lookup` walks a candidate prompt down the
+    chain and returns the deepest registered (donor, pages) hit.  First
+    registrant wins a key (stable donors); collisions and staleness are the
+    CALLER's problem — adopters must verify the donor's actual token ids
+    and page residency before attaching (backend.adopt_prefix does)."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.chains: Dict[int, Tuple[str, int]] = {}   # key -> (sid, depth)
+        self.by_sid: Dict[str, List[int]] = {}         # sid -> keys it owns
+
+    @staticmethod
+    def _chunk_key(parent: int, chunk: Tuple[int, ...]) -> int:
+        return hash((parent,) + chunk)
+
+    def register(self, sid: str, ids: Sequence[int]) -> int:
+        """Index every full-page prefix of ``ids``; returns pages indexed."""
+        ps = self.page_size
+        key, depth = 0, 0
+        owned = self.by_sid.setdefault(sid, [])
+        for i in range(0, len(ids) - ps + 1, ps):
+            key = self._chunk_key(key, tuple(ids[i:i + ps]))
+            depth += 1
+            if key not in self.chains:
+                self.chains[key] = (sid, depth)
+                owned.append(key)
+        return depth
+
+    def lookup(self, ids: Sequence[int],
+               exclude: Optional[str] = None) -> Tuple[Optional[str], int]:
+        """Deepest registered (donor, depth-in-pages) whose indexed prefix
+        chain-matches ``ids``; (None, 0) when no full page matches."""
+        ps = self.page_size
+        key, depth = 0, 0
+        best: Tuple[Optional[str], int] = (None, 0)
+        for i in range(0, len(ids) - ps + 1, ps):
+            key = self._chunk_key(key, tuple(ids[i:i + ps]))
+            hit = self.chains.get(key)
+            depth += 1
+            # a miss at this depth does NOT end the walk: key(d) is computed
+            # from the ids alone, and a dropped session may have taken its
+            # shallow keys with it while a deeper registrant's keys survive
+            if hit is not None and hit[0] != exclude:
+                best = (hit[0], depth)
+        return best
+
+    def drop(self, sid: str) -> None:
+        for key in self.by_sid.pop(sid, []):
+            cur = self.chains.get(key)
+            if cur is not None and cur[0] == sid:
+                del self.chains[key]
+
+    def clear(self) -> None:
+        self.chains.clear()
+        self.by_sid.clear()
 
 
 @dataclass
@@ -36,6 +106,10 @@ class KVEntry:
     on_disk: bool = False          # a complete persistent copy exists
     pinned: bool = False           # in active use by the engine (not evictable)
     priority: int = 0
+    # tokens of this session's context resident in pages SHARED with other
+    # sessions (informational: the bytes ledger charges shared pages to
+    # their first owner only, so per-entry bytes undercount by this span)
+    shared_tokens: int = 0
 
     def __post_init__(self):
         if not self.tier:
@@ -55,6 +129,9 @@ class TieredKVStore:
         self.budget = {HBM: hbm_budget, HOST: host_budget, DISK: disk_budget}
         self.used = {HBM: 0, HOST: 0, DISK: 0}
         self.entries: Dict[str, KVEntry] = {}
+        # cross-session prefix index (real-mode serving attaches one sized
+        # to the backend's page geometry; sim mode leaves it None)
+        self.prefix: Optional[PrefixIndex] = None
 
     # -- admission -------------------------------------------------------------
 
@@ -71,6 +148,11 @@ class TieredKVStore:
         return e
 
     def drop(self, session_id: str) -> None:
+        # prefix hygiene FIRST, and unconditionally: even a session the
+        # store never admitted (dropped mid-serve, before its first
+        # mark_resident) may have registered prefix chunks
+        if self.prefix is not None:
+            self.prefix.drop(session_id)
         e = self.entries.pop(session_id, None)
         if e is None:
             return

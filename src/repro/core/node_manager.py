@@ -192,15 +192,21 @@ class NodeManager:
         return stall
 
     def mark_resident(self, sid: str, n_tokens: int,
-                      bytes_per_layer: float, priority: int = 0) -> None:
-        """After serving, the session's (grown) KV is in HBM on this node."""
+                      bytes_per_layer: float, priority: int = 0,
+                      shared_tokens: int = 0) -> None:
+        """After serving, the session's (grown) KV is in HBM on this node.
+        ``shared_tokens`` of that context live in pages shared with other
+        sessions (real-mode prefix sharing) — the backend already excluded
+        them from ``bytes_per_layer``, so the ledger never double-charges a
+        physical page; the entry records the span for observability."""
         if sid in self.store.entries:
             self.store.grow(sid, 0, int(bytes_per_layer))
             e = self.store.entries[sid]
             e.n_tokens = n_tokens
         else:
-            self.store.admit(sid, n_tokens, int(bytes_per_layer),
-                             self.n_layers, tier=HBM, priority=priority)
+            e = self.store.admit(sid, n_tokens, int(bytes_per_layer),
+                                 self.n_layers, tier=HBM, priority=priority)
+        e.shared_tokens = shared_tokens
         self.fetches.pop(sid, None)
 
     # -- cooperative memory management ---------------------------------------------------

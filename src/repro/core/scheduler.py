@@ -77,13 +77,21 @@ class SymphonyScheduler:
     # must consult the physical KV holder and the failure-recovery path,
     # which the scheduler alone cannot see)
 
-    def route(self, req: InferenceRequest, now: float) -> int:
-        """Route an inference request; advisory-planned node wins."""
+    def route(self, req: InferenceRequest, now: float,
+              prefix_node: Optional[int] = None) -> int:
+        """Route an inference request; advisory-planned node wins, then a
+        ``prefix_node`` hint (a node whose resident pages already hold a
+        shared prefix of this prompt — serving there skips that prefill
+        entirely via copy-on-write sharing), then the placement policy."""
         meta = self.session(req.session_id)
         req.priority = max(req.priority, meta.priority)
         target = self._unplan(req.session_id)
         if target is None or not self.nodes[target].alive:
-            target = self.policy.place(self, meta, advisory=False)
+            if prefix_node is not None and prefix_node in self.nodes \
+                    and self.nodes[prefix_node].alive:
+                target = prefix_node
+            else:
+                target = self.policy.place(self, meta, advisory=False)
         req.node_id = target
         # session history length; the engine decides whether it is reusable
         # KV (symphony/sticky) or redundant recompute work (stateless)

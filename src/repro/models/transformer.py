@@ -29,7 +29,8 @@ class DenseLM:
         # without reaching into jit internals (see paged_compile_counts)
         self._step_jit = None
         self._scatter_jit = None
-        self._compile_keys = dict(step=set(), scatter=set())
+        self._fork_jit = None
+        self._compile_keys = dict(step=set(), scatter=set(), fork=set())
 
     # -- parameters ---------------------------------------------------------
 
@@ -343,6 +344,29 @@ class DenseLM:
         args = (k_pool, v_pool, layer_ids, pages, offs, ks, vs)
         self._compile_keys["scatter"].add(self._shape_sig(args, "scatter"))
         return self._scatter_jit(*args)
+
+    @staticmethod
+    def _fork_paged_impl(k_pool, v_pool, layer_ids, src, dst):
+        return (k_pool.at[layer_ids, dst].set(k_pool[layer_ids, src]),
+                v_pool.at[layer_ids, dst].set(v_pool[layer_ids, src]))
+
+    def fork_paged(self, k_pool, v_pool, layer_ids, src, dst):
+        """Copy-on-write page fork: device-side copy of whole pages within
+        the stacked pools (pool[l, dst] <- pool[l, src]), one fused donating
+        dispatch for a whole batch of (layer, src, dst) triples.  The
+        backend calls this when a lane's first write of a step lands inside
+        a page other sequences still read — the writer gets a private copy,
+        readers keep the original.  Pad rows must point src == dst == the
+        trash page (a harmless self-copy) so each fork compiles once per
+        row-count bucket, censused under the "fork" key.
+
+        layer_ids/src/dst: (F,) int32.  Returns (k_pool, v_pool)."""
+        if self._fork_jit is None:
+            self._fork_jit = jax.jit(self._fork_paged_impl,
+                                     donate_argnums=(0, 1))
+        args = (k_pool, v_pool, layer_ids, src, dst)
+        self._compile_keys["fork"].add(self._shape_sig(args, "fork"))
+        return self._fork_jit(*args)
 
     @staticmethod
     def _shape_sig(args, kernel_mode: str):

@@ -53,6 +53,23 @@ prompt slice; mid-prompt chunks emit nothing (their tokens' KV is written,
 no token is sampled); the FINAL chunk emits one token; each decode consumes
 the pending token, writes its KV, and emits the next.  A resume-after-swap
 is just a final chunk with an empty prompt slice.
+
+CROSS-SESSION PREFIX SHARING (copy-on-write): completed sessions register
+their page-aligned token-id chunks in the store's `PrefixIndex`; at
+admission `adopt_prefix` maps a new request's longest indexed prefix onto
+the donor's RESIDENT pages — `PagedAllocator.share` attaches the new
+sequence to the same physical pages (refcount + 1, zero copies, zero
+prefill for the shared span) after verifying the donor's actual token ids
+(hash collisions and stale index entries are rejected here, not trusted).
+The shared span may end mid-page (token-wise extension against the donor's
+history); the read path needs no kernel change — shared pages simply
+appear in both lanes' block tables.  The first WRITE into a page whose
+refcount is > 1 triggers a CoW fork inside `step()`: the allocator remaps
+the writer to a fresh page and `DenseLM.fork_paged` copies the page
+contents device-side (one bucketed donating dispatch per step), so readers
+never observe the writer's tokens.  Sharing degrades gracefully: a sharer
+that swaps out comes back on private pages (host payloads are per-session
+copies), and a crashed node's index dies with its pools.
 """
 from __future__ import annotations
 
@@ -64,6 +81,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.memory import PrefixIndex
 from repro.serving.cost_model import CostModel
 from repro.serving.kv_cache import OutOfPages, PagedAllocator
 from repro.serving.transfer import (IN, OUT, PERSIST, PendingPayload,
@@ -141,6 +159,19 @@ class Backend:
 
     def drain_transfers(self, kind: Optional[str] = None) -> None:
         """Blocking fence of all in-flight transfers (of one kind)."""
+
+    # -- cross-session prefix sharing (sim: no pages to share) --------------
+    def adopt_prefix(self, req) -> int:
+        """Attach the longest indexed shared prefix of ``req.prompt_ids``
+        to existing resident pages (copy-on-write); returns the shared
+        token count (0: nothing adopted).  Idempotent per session — a
+        request re-examined by admission adopts at most once."""
+        return 0
+
+    def prefix_match_tokens(self, prompt_ids) -> int:
+        """Non-mutating routing query: how many leading tokens of this
+        prompt could be served from pages resident on THIS node."""
+        return 0
 
     # -- preemption / lifecycle --------------------------------------------
     def swap_out(self, sid: str, n_tokens: int) -> None:
@@ -235,6 +266,10 @@ class _SeqState:
     n_kv: int = 0                       # tokens whose KV is written in pools
     last_token: Optional[int] = None    # pending token (KV not yet written)
     priority: int = 0
+    # token ids whose KV is written, in order (len == n_kv): the substrate
+    # of prefix sharing — registered in the PrefixIndex at finish, and the
+    # ground truth adopt_prefix verifies candidate matches against
+    ids: List[int] = field(default_factory=list)
 
 
 def _bucket(n: int, floor: int = 1) -> int:
@@ -290,11 +325,13 @@ class RealBackend(Backend):
         if self.spool:
             self.spool.mkdir(parents=True, exist_ok=True)
         self.mgr = None
+        self._local_prefix: Optional[PrefixIndex] = None
         if mgr is not None:
             self.attach(mgr)
         self.stats = dict(prefills=0, decode_steps=0, swaps_out=0,
                           swaps_in=0, layer_evictions=0, layer_promotions=0,
-                          migrations_in=0, copied_bytes=0.0, disk_writes=0)
+                          migrations_in=0, copied_bytes=0.0, disk_writes=0,
+                          prefix_hits=0, shared_tokens=0, cow_forks=0)
         self.logit_trace: List[Tuple[str, np.ndarray]] = []
 
     def compile_counts(self) -> Dict[str, int]:
@@ -307,6 +344,20 @@ class RealBackend(Backend):
         """Bidirectional wiring: manager promote/evict trigger real copies."""
         self.mgr = mgr
         mgr.attach_backend(self)
+
+    @property
+    def prefix(self) -> PrefixIndex:
+        """The node's prefix index.  Lives in the TieredKVStore (the store
+        owns all cross-session placement state); a manager-less backend
+        keeps a local one so sharing still works in unit harnesses."""
+        if self.mgr is not None:
+            store = self.mgr.store
+            if store.prefix is None or store.prefix.page_size != self.page_size:
+                store.prefix = PrefixIndex(self.page_size)
+            return store.prefix
+        if self._local_prefix is None:
+            self._local_prefix = PrefixIndex(self.page_size)
+        return self._local_prefix
 
     # -- sizes --------------------------------------------------------------
 
@@ -347,6 +398,65 @@ class RealBackend(Backend):
         if st is None:
             return 0
         return st.n_kv + (1 if st.last_token is not None else 0)
+
+    # -- cross-session prefix sharing (copy-on-write) -----------------------
+
+    def _find_prefix(self, ids: List[int], exclude: Optional[str] = None
+                     ) -> Tuple[Optional[str], int]:
+        """Longest indexed-AND-VERIFIED shared span of ``ids``: (donor sid,
+        shared token count).  The index is a hint — hash collisions and
+        stale entries are rejected here by checking the donor's actual
+        token history, then the span extends TOKEN-WISE into the donor's
+        partial last page (so divergence mid-page still shares the page,
+        CoW-forked on first write).  Capped at len(ids) - 1: the adopter
+        must keep at least one token to process (the pending-token
+        invariant forbids zero-token lanes)."""
+        ps = self.page_size
+        if len(ids) < ps + 1:
+            return None, 0
+        limit = len(ids) - 1
+        donor, depth = self.prefix.lookup(ids[:limit], exclude=exclude)
+        if donor is None:
+            return None, 0
+        dst = self.seqs.get(donor)
+        if dst is None or dst.ids[:depth * ps] != list(ids[:depth * ps]):
+            return None, 0               # stale index entry / hash collision
+        m = depth * ps
+        stop = min(len(dst.ids), limit)
+        while m < stop and dst.ids[m] == ids[m]:
+            m += 1
+        npages = self.alloc[0].pages_for(m)
+        for a in self.alloc:
+            s = a.seqs.get(donor)
+            if s is None or len(s.pages) < npages or s.n_tokens < m:
+                return None, 0           # donor (partially) evicted
+        return donor, m
+
+    def prefix_match_tokens(self, prompt_ids) -> int:
+        _, m = self._find_prefix(list(prompt_ids or []))
+        return m
+
+    def adopt_prefix(self, req) -> int:
+        """Attach ``req``'s longest verified shared prefix to the donor's
+        resident pages: `PagedAllocator.share` on every layer (refcount + 1,
+        zero copies), a new `_SeqState` already holding the shared span.
+        The engine then trims the request's prompt by the returned count —
+        the shared tokens are never prefillled."""
+        sid = req.session_id
+        if sid in self.seqs:
+            return 0                     # re-examined admission: at most once
+        ids = list(req.prompt_ids or [])
+        donor, m = self._find_prefix(ids, exclude=sid)
+        if m <= 0:
+            return 0
+        npages = self.alloc[0].pages_for(m)
+        for a in self.alloc:
+            a.share(sid, a.seqs[donor].pages[:npages], m)
+        self.seqs[sid] = _SeqState(n_kv=m, ids=list(ids[:m]),
+                                   priority=req.priority)
+        self.stats["prefix_hits"] += 1
+        self.stats["shared_tokens"] += m
+        return m
 
     # -- async transfer plumbing -------------------------------------------
 
@@ -621,6 +731,21 @@ class RealBackend(Backend):
                                            lane.start + lane.new_tokens])
         return ids
 
+    def _fork_need(self, a: PagedAllocator, sid: str) -> int:
+        """Pages a CoW fork will consume in allocator ``a`` when ``sid``
+        next writes: 1 iff its write position lands mid-page in a page
+        other holders still reference."""
+        st = self.seqs.get(sid)
+        if st is None or st.n_kv % self.page_size == 0:
+            return 0
+        s = a.seqs.get(sid)
+        if s is None:
+            return 0
+        pi = st.n_kv // self.page_size
+        if pi < len(s.pages) and a.refcount_of(s.pages[pi]) > 1:
+            return 1
+        return 0
+
     def _plan_fits_now(self, lanes) -> bool:
         for l, a in enumerate(self.alloc):
             need = 0
@@ -632,6 +757,7 @@ class RealBackend(Backend):
                 if st is not None and sid in a.seqs:
                     s = a.seqs[sid]
                     need += a.pages_for(s.n_tokens + q) - len(s.pages)
+                    need += self._fork_need(a, sid)
                 else:
                     # swap-in rescatters the full history before the chunk
                     base = st.n_kv if st is not None else 0
@@ -700,7 +826,7 @@ class RealBackend(Backend):
         # swap-outs' leased pages once if the free lists run short)
         def _shortfall(a):
             return sum(a.pages_for(a.seqs[s].n_tokens + len(ids))
-                       - len(a.seqs[s].pages)
+                       - len(a.seqs[s].pages) + self._fork_need(a, s)
                        for s, ids in zip(sids, ids_by_lane)) \
                 - len(a.free_list)
         for attempt in (0, 1):
@@ -712,6 +838,35 @@ class RealBackend(Backend):
                 continue
             raise OutOfPages(f"step: need {worst} pages beyond the free "
                              f"list")
+        # COPY-ON-WRITE forks, before any table is built: a lane whose write
+        # position lands mid-page in a page other holders still reference
+        # gets a private copy — allocator remaps the block-table entry, one
+        # bucketed donating device dispatch copies the contents.  Writes at
+        # a page boundary never fork (the new page is freshly allocated and
+        # private by construction).
+        forks: List[Tuple[int, int, int]] = []       # (layer, src, dst)
+        for sid in sids:
+            st = self.seqs[sid]
+            if st.n_kv % self.page_size == 0:
+                continue
+            pi = st.n_kv // self.page_size
+            for l, a in enumerate(self.alloc):
+                s = a.seqs[sid]
+                if pi < len(s.pages):
+                    r = a.fork_cow(sid, pi)
+                    if r is not None:
+                        forks.append((l, r[0], r[1]))
+        if forks:
+            Fb = _bucket(len(forks))
+            f_li = np.zeros((Fb,), np.int32)
+            f_src = np.full((Fb,), self.n_pages, np.int32)  # pad: trash->trash
+            f_dst = np.full((Fb,), self.n_pages, np.int32)
+            for i, (l, src, dst) in enumerate(forks):
+                f_li[i], f_src[i], f_dst[i] = l, src, dst
+            self.k_pool, self.v_pool = self.model.fork_paged(
+                self.k_pool, self.v_pool, jnp.asarray(f_li),
+                jnp.asarray(f_src), jnp.asarray(f_dst))
+            self.stats["cow_forks"] += len(forks)
         for sid, ids in zip(sids, ids_by_lane):
             self._extend_all(sid, len(ids))
 
@@ -761,6 +916,7 @@ class RealBackend(Backend):
         for i, (ln, ids) in enumerate(zip(lanes, ids_by_lane)):
             st = self.seqs[ln.req.session_id]
             st.n_kv += len(ids)
+            st.ids.extend(ids)
             if ln.final:
                 if lg_np is not None:
                     self.logit_trace.append((ln.req.session_id, lg_np[i]))
@@ -806,8 +962,12 @@ class RealBackend(Backend):
 
     def drop(self, sid: str) -> None:
         # cancel in-flight transfers (reclaiming their leased pages): the
-        # session is gone, nothing should be installed or written for it
+        # session is gone, nothing should be installed or written for it.
+        # Shared pages survive the free(): refcounting keeps any page a
+        # sharer still references out of the free list, and the prefix
+        # index forgets this donor so no later admission adopts from it.
         self.transfers.poison(sid=sid, release=True)
+        self.prefix.drop(sid)
         for a in self.alloc:
             a.free(sid)
         for l in range(self.cfg.n_layers):
@@ -819,13 +979,29 @@ class RealBackend(Backend):
                 f.unlink()
 
     def finish(self, req, now) -> None:
-        """Request completed: sync the store's view of the grown session."""
+        """Request completed: register the session's token history in the
+        prefix index (it becomes a donor) and sync the store's view."""
+        sid = req.session_id
+        st = self.seqs.get(sid)
+        if st is not None and st.n_kv > 0 and len(st.ids) == st.n_kv:
+            # ids shorter than n_kv = history not fully known (e.g. session
+            # recovered from a pre-sharing spool): never index unverifiable
+            # chunks
+            self.prefix.register(sid, st.ids)
         if self.mgr is None:
             return
-        sid = req.session_id
-        bpl = len(self.alloc[0].seqs[sid].pages) * self._layer_page_bytes
+        # the bytes ledger charges each SHARED page to its first owner only
+        # — a sharer accounts its private pages; the physical allocator
+        # (used_pages) remains the real capacity gate either way
+        a0 = self.alloc[0]
+        pages = a0.seqs[sid].pages
+        private = sum(1 for p in pages if a0.refcount_of(p) == 1)
+        shared_tok = min((len(pages) - private) * self.page_size,
+                         st.n_kv if st is not None else 0)
+        bpl = private * self._layer_page_bytes
         self.mgr.mark_resident(sid, self.session_tokens(sid), bpl,
-                               priority=req.priority)
+                               priority=req.priority,
+                               shared_tokens=shared_tok)
         e = self._store_entry(sid)
         if e is not None:
             e.pinned = False         # idle again: migratable between turns
@@ -898,7 +1074,8 @@ class RealBackend(Backend):
         # spool or a post-crash recovery cannot resume the sequence
         last_token = -1 if st.last_token is None else st.last_token
         priority = st.priority
-        path = self.spool / f"{sid}.npz"
+        ids_arr = np.asarray(st.ids, np.int64)     # snapshot at launch: the
+        path = self.spool / f"{sid}.npz"           # live list keeps growing
 
         def _complete(t):
             payloads: Dict[int, dict] = dict(empties)
@@ -914,7 +1091,7 @@ class RealBackend(Backend):
             assert len(ns) == 1, f"{sid}: per-layer n_tokens diverge: {ns}"
             arrs = dict(n_tokens=np.int64(ns.pop()),
                         last_token=np.int64(last_token),
-                        priority=np.int64(priority))
+                        priority=np.int64(priority), ids=ids_arr)
             for l, p in payloads.items():
                 arrs[f"k{l}"] = p["k"]
                 arrs[f"v{l}"] = p["v"]
@@ -947,14 +1124,18 @@ class RealBackend(Backend):
             if f.exists():
                 f.unlink()
         return dict(layers=layers, n_kv=st.n_kv, last_token=st.last_token,
-                    priority=st.priority)
+                    priority=st.priority, ids=list(st.ids))
 
     def import_session(self, sid: str, payload: dict) -> None:
         """Adopt a migrated session into the host tier (promotion follows
         the node manager's priority plan)."""
+        ids = list(payload.get("ids") or [])
+        if len(ids) != payload["n_kv"]:
+            ids = []                 # unknown history: never a prefix donor
         self.seqs[sid] = _SeqState(n_kv=payload["n_kv"],
                                    last_token=payload["last_token"],
-                                   priority=payload.get("priority", 0))
+                                   priority=payload.get("priority", 0),
+                                   ids=ids)
         for l, p in payload["layers"].items():
             self.host[(sid, l)] = p
         self.stats["migrations_in"] += 1
@@ -969,6 +1150,7 @@ class RealBackend(Backend):
         mid-copy installs nothing, a pending .npz write never happens —
         so no phantom KV can outlive the node."""
         self.transfers.poison()
+        self.prefix.clear()          # the index described pages now gone
         self.alloc = [PagedAllocator(self.n_pages, self.page_size)
                       for _ in range(self.cfg.n_layers)]
         self.host.clear()
@@ -992,8 +1174,10 @@ class RealBackend(Backend):
                       for l in range(self.cfg.n_layers)}
             last = int(z["last_token"]) if "last_token" in z.files else -1
             prio = int(z["priority"]) if "priority" in z.files else 0
+            ids = [int(i) for i in z["ids"]] if "ids" in z.files else []
         self.stats["copied_bytes"] += sum(
             p["k"].nbytes + p["v"].nbytes for p in layers.values())
         f.unlink()
         return dict(layers=layers, n_kv=n,
-                    last_token=None if last < 0 else last, priority=prio)
+                    last_token=None if last < 0 else last, priority=prio,
+                    ids=ids)

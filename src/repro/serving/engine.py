@@ -81,7 +81,8 @@ class NodeEngine:
         self.completed: List[InferenceRequest] = []
         self.stats = dict(prefill_tokens=0, redundant_tokens=0,
                           decode_steps=0, preemptions=0, stall_s=0.0,
-                          busy_s=0.0, chunks=0, admission_skips=0)
+                          busy_s=0.0, chunks=0, admission_skips=0,
+                          shared_prefix_tokens=0)
 
     # -- queue interface ----------------------------------------------------------
 
@@ -197,6 +198,20 @@ class NodeEngine:
         while (idx < len(self.waiting)
                and len(self.running) < self.max_batch):
             req = self.waiting[idx]
+            # cross-session prefix sharing: a brand-new session whose prompt
+            # extends an indexed prefix adopts the donor's resident pages
+            # (copy-on-write) — the shared span becomes cached context and
+            # leaves the prompt, so it is never prefillled.  Swap-resumed
+            # or recompute re-admissions never adopt: their KV (or its
+            # recompute obligation) already exists
+            if (self.reuses_kv and req.cached_tokens == 0
+                    and req.generated == 0 and req.prompt_ids):
+                shared = self.backend.adopt_prefix(req)
+                if shared:
+                    req.cached_tokens = shared
+                    req.prompt_ids = list(req.prompt_ids[shared:])
+                    req.prompt_tokens = len(req.prompt_ids)
+                    self.stats["shared_prefix_tokens"] += shared
             work = self._prompt_work(req)
             if budget <= 0 and work > 0:
                 break                    # no token budget left this step

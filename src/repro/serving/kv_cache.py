@@ -10,11 +10,27 @@ Design notes vs the GPU original (DESIGN.md §3): the pool is a dense
 (P, page_size, Hkv, D) array per layer — static shape for XLA — and the
 block table is the only indirection; copy-on-migrate swaps page *contents*,
 never remaps live tables mid-step (tables are step inputs).
+
+Pages are REFCOUNTED so cross-session prefix sharing can attach many
+sequences to the same physical page (copy-on-write, Pensieve-style).  A
+page is held by (a) every sequence whose block table references it, (b)
+explicit `ref()` pins, and (c) in-flight transfer leases — three separate
+ledgers, because they have different lifetimes:
+
+    refcount[p]  = #sequence references + #explicit pins  (external[p])
+    leased[p]    = #in-flight transfers still reading p
+
+A page returns to the free list only when BOTH counts reach zero.  `free`
+and `truncate` decrement instead of freeing; `lease` converts a sequence's
+hold into a transfer hold; `fork_cow` gives a writer a private copy of a
+page other holders still read.  `check()` asserts conservation of all
+three ledgers after every mutation sequence.
 """
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -38,16 +54,25 @@ class PagedAllocator:
         self.page_size = page_size
         self.free_list: List[int] = list(range(n_pages - 1, -1, -1))
         self.seqs: Dict[str, SeqAlloc] = {}
-        # pages removed from a sequence but still physically held by an
-        # in-flight device->host transfer (serving/transfer.py): neither
-        # owned nor free until release()
-        self.leased: set = set()
-        self.stats = dict(allocs=0, frees=0, peak_used=0, leases=0)
+        # page -> total holds (sequence references + explicit pins)
+        self.refcount: Dict[int, int] = {}
+        # page -> explicit ref()/unref() pins (a subset of refcount, kept
+        # separately so check() can prove refcount == seq occurrences + pins)
+        self.external: Dict[int, int] = {}
+        # page -> in-flight transfer holds: removed from a sequence but
+        # still physically read by a device->host copy
+        # (serving/transfer.py): neither owned nor free until release().
+        # A COUNT, not a set — two transfers (e.g. two sharers swapping
+        # out) may hold the same shared page simultaneously
+        self.leased: Dict[int, int] = {}
+        self.stats = dict(allocs=0, frees=0, peak_used=0, leases=0,
+                          shared=0, cow_forks=0)
 
     # -- capacity ----------------------------------------------------------------
 
     @property
     def used_pages(self) -> int:
+        """PHYSICAL pages in use (a shared page counts once)."""
         return self.n_pages - len(self.free_list)
 
     def pages_for(self, n_tokens: int) -> int:
@@ -58,6 +83,25 @@ class PagedAllocator:
         need = self.pages_for((self.seqs[seq_id].n_tokens if seq_id in
                                self.seqs else 0) + n_tokens) - len(have)
         return need <= len(self.free_list)
+
+    # -- refcount plumbing --------------------------------------------------------
+
+    def _take(self, page: int) -> None:
+        self.refcount[page] = self.refcount.get(page, 0) + 1
+
+    def _put(self, page: int) -> None:
+        """Drop one refcount hold; the page frees at 0 holds + 0 leases."""
+        n = self.refcount[page] - 1
+        if n > 0:
+            self.refcount[page] = n
+            return
+        del self.refcount[page]
+        if not self.leased.get(page):
+            self.free_list.append(page)
+            self.stats["frees"] += 1
+
+    def refcount_of(self, page: int) -> int:
+        return self.refcount.get(page, 0)
 
     # -- alloc / extend / free -----------------------------------------------------
 
@@ -78,47 +122,131 @@ class PagedAllocator:
             raise OutOfPages(
                 f"{seq_id}: need {need} pages, have {len(self.free_list)}")
         for _ in range(need):
-            s.pages.append(self.free_list.pop())
+            p = self.free_list.pop()
+            s.pages.append(p)
+            self._take(p)
             self.stats["allocs"] += 1
         s.n_tokens += new_tokens
         self.stats["peak_used"] = max(self.stats["peak_used"], self.used_pages)
         return s
 
     def free(self, seq_id: str) -> int:
+        """Detach a sequence; each page's refcount drops by one and only
+        sole-held pages (no other sharer, no pin, no lease) are freed."""
         s = self.seqs.pop(seq_id, None)
         if s is None:
             return 0
-        self.free_list.extend(reversed(s.pages))
-        self.stats["frees"] += len(s.pages)
+        for p in reversed(s.pages):
+            self._put(p)
         return len(s.pages)
 
     def lease(self, seq_id: str) -> List[int]:
         """Detach a sequence whose pages an in-flight transfer still reads:
         the sequence disappears from the table, but its pages stay out of
         the free list until `release()` — a swap-out that has not completed
-        must never have its source pages handed to another sequence."""
+        must never have its source pages handed to another sequence.  A
+        shared page stays allocated for its other holders regardless."""
         s = self.seqs.pop(seq_id, None)
         if s is None:
             return []
-        self.leased.update(s.pages)
+        for p in s.pages:
+            self.leased[p] = self.leased.get(p, 0) + 1
+            # convert the sequence hold into a transfer hold (no free: the
+            # lease keeps the page out of the free list)
+            n = self.refcount[p] - 1
+            if n > 0:
+                self.refcount[p] = n
+            else:
+                del self.refcount[p]
         self.stats["leases"] += len(s.pages)
         return list(s.pages)
 
     def release(self, pages: List[int]) -> None:
-        """Return leased pages to the free list (transfer completed)."""
-        assert self.leased.issuperset(pages), "releasing a non-leased page"
-        self.leased.difference_update(pages)
-        self.free_list.extend(reversed(pages))
-        self.stats["frees"] += len(pages)
+        """Return transfer holds (copy landed/cancelled); pages with no
+        remaining holder of any kind go back to the free list."""
+        for p in pages:
+            held = self.leased.get(p, 0)
+            assert held > 0, f"releasing a non-leased page {p}"
+            if held > 1:
+                self.leased[p] = held - 1
+                continue
+            del self.leased[p]
+            if not self.refcount.get(p):
+                self.free_list.append(p)
+                self.stats["frees"] += 1
 
     def truncate(self, seq_id: str, n_tokens: int) -> None:
         """Release tail pages (e.g. after demoting part of a session)."""
         s = self.seqs[seq_id]
         keep = self.pages_for(n_tokens)
         while len(s.pages) > keep:
-            self.free_list.append(s.pages.pop())
-            self.stats["frees"] += 1
+            self._put(s.pages.pop())
         s.n_tokens = min(s.n_tokens, n_tokens)
+
+    # -- prefix sharing (copy-on-write) ------------------------------------------
+
+    def ref(self, pages: List[int]) -> None:
+        """Pin live pages (they must already be held by someone)."""
+        for p in pages:
+            assert self.refcount.get(p, 0) > 0 or self.leased.get(p, 0) > 0, \
+                f"ref of unheld page {p}"
+            self._take(p)
+            self.external[p] = self.external.get(p, 0) + 1
+
+    def unref(self, pages: List[int]) -> None:
+        for p in pages:
+            pins = self.external.get(p, 0)
+            assert pins > 0, f"unref of unpinned page {p}"
+            if pins > 1:
+                self.external[p] = pins - 1
+            else:
+                del self.external[p]
+            self._put(p)
+
+    def share(self, dst_id: str, pages: List[int], n_tokens: int) -> SeqAlloc:
+        """Attach a NEW sequence to an existing prefix's pages (no copy):
+        each shared page gains a refcount hold.  ``n_tokens`` is the shared
+        token span; it must exactly fill ``pages`` (page-aligned sharing,
+        or a trailing partial page the writer will CoW-fork into)."""
+        assert dst_id not in self.seqs
+        assert self.pages_for(n_tokens) == len(pages), \
+            f"{dst_id}: {n_tokens} tokens need {self.pages_for(n_tokens)} " \
+            f"pages, got {len(pages)}"
+        for p in pages:
+            assert self.refcount.get(p, 0) > 0, \
+                f"sharing unheld page {p} with {dst_id}"
+        s = SeqAlloc(dst_id, pages=list(pages), n_tokens=n_tokens)
+        self.seqs[dst_id] = s
+        for p in pages:
+            self._take(p)
+        self.stats["shared"] += len(pages)
+        return s
+
+    def fork_cow(self, seq_id: str, page_index: int
+                 ) -> Optional[Tuple[int, int]]:
+        """Copy-on-write fork: give ``seq_id`` a private copy of the page at
+        ``page_index`` in its block table IF other holders still reference
+        it.  Returns (old_page, new_page) for the caller to copy contents
+        (device-side), or None when the sequence is the sole holder and may
+        write in place.  Raises OutOfPages when no free page is available —
+        the caller's pressure path (reclaim leases / preempt) applies."""
+        s = self.seqs[seq_id]
+        old = s.pages[page_index]
+        if self.refcount.get(old, 0) <= 1:
+            return None                  # sole holder: write in place
+        if not self.free_list:
+            raise OutOfPages(f"{seq_id}: CoW fork of page {old} needs a "
+                             f"free page, have 0")
+        new = self.free_list.pop()
+        self._take(new)
+        s.pages[page_index] = new
+        # drop this sequence's hold on the shared original (cannot free:
+        # refcount was > 1)
+        self.refcount[old] -= 1
+        self.stats["allocs"] += 1
+        self.stats["cow_forks"] += 1
+        self.stats["peak_used"] = max(self.stats["peak_used"], self.used_pages)
+        return old, new
 
     # -- kernel interface -------------------------------------------------------------
 
@@ -145,8 +273,24 @@ class PagedAllocator:
     # -- invariant ----------------------------------------------------------------------
 
     def check(self) -> None:
-        owned = [p for s in self.seqs.values() for p in s.pages]
-        held = owned + list(self.leased)
-        assert len(held) == len(set(held)), "double-owned page"
-        assert len(held) + len(self.free_list) == self.n_pages, "leak"
-        assert set(held).isdisjoint(self.free_list), "freed-in-use page"
+        occ = Counter(p for s in self.seqs.values() for p in s.pages)
+        for s in self.seqs.values():
+            assert len(set(s.pages)) == len(s.pages), \
+                f"{s.seq_id}: duplicate page in one block table"
+        # refcount conservation: every hold is a sequence reference or a pin
+        for p, n in self.refcount.items():
+            assert n == occ.get(p, 0) + self.external.get(p, 0), \
+                f"page {p}: refcount {n} != {occ.get(p, 0)} seq refs + " \
+                f"{self.external.get(p, 0)} pins"
+            assert n > 0, f"page {p}: zero refcount entry"
+        for p in occ:
+            assert p in self.refcount, f"page {p}: owned but not refcounted"
+        for p, n in self.external.items():
+            assert n > 0 and p in self.refcount, f"page {p}: dangling pin"
+        for p, n in self.leased.items():
+            assert n > 0, f"page {p}: zero lease entry"
+        held = set(self.refcount) | set(self.leased)
+        free = set(self.free_list)
+        assert len(free) == len(self.free_list), "duplicate free page"
+        assert held.isdisjoint(free), "freed-in-use page"
+        assert len(held) + len(free) == self.n_pages, "leak"

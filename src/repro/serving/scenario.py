@@ -84,6 +84,50 @@ class MultiTurnRealTrace(Trace):
         return evs
 
 
+class SharedPrefixTrace(Trace):
+    """n_sessions single-turn sessions whose prompts share a common prefix
+    (the multi-tenant system-prompt / few-shot workload prefix sharing
+    targets): session k's prompt is ``shared_len`` common tokens plus
+    ``suffix_len`` private tokens.  The first session is the DONOR: the
+    rest arrive (in one wave, ``stagger`` virtual seconds later) only once
+    it completes — causally chained, so its pages are registered in the
+    prefix index before any sharer routes.  Every later session then adopts
+    the shared span copy-on-write instead of prefilling it, and the
+    scheduler's prefix-aware `route` pulls the whole cohort onto the
+    donor's node.  No advisories: placement is the prefix hint's to win.
+    """
+
+    def __init__(self, cfg, n_sessions: int = 4, shared_len: int = 16,
+                 suffix_len: int = 4, gen: int = 4, seed: int = 7,
+                 stagger: float = 0.5):
+        rng = np.random.default_rng(seed)
+        self.gen = gen
+        self.stagger = stagger
+        shared = list(map(int, rng.integers(0, cfg.vocab, shared_len)))
+        self.prompts: Dict[str, List[List[int]]] = {}
+        for i in range(n_sessions):
+            suffix = list(map(int, rng.integers(0, cfg.vocab, suffix_len)))
+            self.prompts[f"s{i:04d}"] = [shared + suffix]
+
+    def _req(self, sid: str, t: float) -> InferenceRequest:
+        p = self.prompts[sid][0]
+        return InferenceRequest(session_id=sid, prompt_tokens=len(p),
+                                max_new_tokens=self.gen, prompt_ids=list(p),
+                                arrival=t)
+
+    def events(self):
+        sids = list(self.prompts)
+        donor, rest = sids[0], sids[1:]
+
+        def cb(_req: InferenceRequest, now: float):
+            return [(now + self.stagger * (1 + 0.001 * k), "request",
+                     self._req(sid, now + self.stagger))
+                    for k, sid in enumerate(rest)]
+
+        return [(0.0, "chain", (donor, cb)),
+                (0.0, "request", self._req(donor, 0.0))]
+
+
 def dense_reference(cfg, model, params, prompts: Dict[str, List[List[int]]],
                     gen: int) -> Dict[str, List[List[int]]]:
     """Greedy full-recompute reference: each session's turn stream served

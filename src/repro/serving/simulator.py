@@ -337,10 +337,29 @@ class ClusterRuntime:
         self.managers[target].on_advisory(adv, kv_node=holder, now=now,
                                           to_hbm=to_hbm)
 
+    def _prefix_node(self, req: InferenceRequest) -> Optional[int]:
+        """Routing hint: the live node whose resident pages hold the
+        longest indexed shared prefix of this prompt.  Only a FRESH session
+        consults the index (an ongoing session's sticky/advisory placement
+        dominates), only in real mode (sim has no pages or token ids)."""
+        if (self.mode != "real" or not self.policy.reuses_kv
+                or not req.prompt_ids
+                or self.sched.session(req.session_id).total_tokens > 0):
+            return None
+        best, best_m = None, 0
+        for i, be in self.backends.items():
+            if not self.sched.nodes[i].alive:
+                continue
+            m = be.prefix_match_tokens(req.prompt_ids)
+            if m > best_m:
+                best, best_m = i, m
+        return best
+
     def _dispatch(self, req: InferenceRequest, now: float,
                   schedule_node) -> None:
         sid = req.session_id
-        node = self.sched.route(req, now)
+        node = self.sched.route(req, now,
+                                prefix_node=self._prefix_node(req))
         meta = self.sched.session(sid)
         if self.policy.reuses_kv and meta.total_tokens > 0:
             holder = self._kv_holder(sid)

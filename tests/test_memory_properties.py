@@ -17,9 +17,9 @@ from repro.serving.kv_cache import OutOfPages, PagedAllocator
 
 ALLOC_OP = st.tuples(
     st.sampled_from(["alloc", "extend", "truncate", "free", "tables",
-                     "lease", "release"]),
+                     "lease", "release", "share", "fork", "ref", "unref"]),
     st.integers(0, 5),           # session index
-    st.integers(0, 30),          # token count argument
+    st.integers(0, 30),          # token count / page-pick argument
 )
 
 
@@ -29,6 +29,7 @@ def test_allocator_state_machine(ops):
     a = PagedAllocator(n_pages=24, page_size=4)
     model = {}                                    # sid -> expected n_tokens
     leases = []                                   # in-flight transfer pages
+    pins = []                                     # explicit ref() pin lists
     for op, sid_i, tok in ops:
         sid = f"s{sid_i}"
         try:
@@ -52,6 +53,30 @@ def test_allocator_state_machine(ops):
             elif op == "release" and leases:
                 # transfer completion: leased pages come home
                 a.release(leases.pop(tok % len(leases)))
+            elif op == "share" and sid not in a.seqs and a.seqs:
+                # prefix adoption: attach a new sequence to a donor's pages
+                donor = a.seqs[sorted(a.seqs)[tok % len(a.seqs)]]
+                a.share(sid, donor.pages, donor.n_tokens)
+                model[sid] = donor.n_tokens
+            elif op == "fork" and sid in a.seqs and a.seqs[sid].pages:
+                # copy-on-write: the writer gets a private page (or keeps
+                # it, when it is already the sole holder)
+                s = a.seqs[sid]
+                before = list(s.pages)
+                pi = tok % len(s.pages)
+                got = a.fork_cow(sid, pi)
+                if got is None:
+                    assert s.pages == before      # sole holder: in place
+                else:
+                    old, new = got
+                    assert before[pi] == old and s.pages[pi] == new
+                    assert a.refcount_of(new) == 1
+            elif op == "ref" and sid in a.seqs and a.seqs[sid].pages:
+                pages = list(a.seqs[sid].pages)
+                a.ref(pages)                      # pin outlives the sequence
+                pins.append(pages)
+            elif op == "unref" and pins:
+                a.unref(pins.pop(tok % len(pins)))
             elif op == "tables" and a.seqs:
                 sids = sorted(a.seqs)
                 tbl = a.batch_block_tables(sids)
@@ -62,8 +87,17 @@ def test_allocator_state_machine(ops):
             # failed op must not have mutated anything
             pass
         a.check()
-        assert a.used_pages == sum(len(s.pages) for s in a.seqs.values()) \
-            + sum(len(p) for p in leases)
+        # physical conservation: used pages == the union of every holder's
+        # view (sequence tables, in-flight leases, explicit pins) — a
+        # shared page counts ONCE however many sequences reference it
+        held = set()
+        for s in a.seqs.values():
+            held.update(s.pages)
+        for p in leases:
+            held.update(p)
+        for p in pins:
+            held.update(p)
+        assert a.used_pages == len(held)
         for sid2, n in model.items():
             s = a.seqs[sid2]
             assert s.n_tokens == n

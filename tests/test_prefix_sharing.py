@@ -1,0 +1,484 @@
+"""Cross-session prefix sharing (copy-on-write): the PR's correctness wall.
+
+A finished session registers its page-aligned token chunks in the node's
+`PrefixIndex`; a new session whose prompt extends an indexed prefix adopts
+the donor's resident pages at admission (refcount + 1, zero prefill for
+the shared span) and CoW-forks only at its first divergent write.  Every
+test here diffs against the dense full-recompute reference — sharing that
+is not token-exact is corruption, not compression:
+
+* divergence at a page boundary (no fork) and mid-page (fork on every
+  layer), MHA + GQA geometry;
+* concurrent divergence in one shared partial page — the DONOR writes too,
+  so the donor forks and the adopter inherits sole ownership;
+* preempt/resume of one sharer while the other keeps decoding (the leased
+  shared pages must serve the survivor throughout);
+* the satellite regression: dropping a session whose swap-out is in flight
+  while a sharer still references its pages must neither free the shared
+  pages nor leave prefix-index entries pointing at the dead donor;
+* scheduler integration: `route` prefers the node already holding the
+  prefix, so a shared-prompt cohort lands on one node and skips its
+  shared prefill entirely.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.advisory import InferenceRequest
+from repro.core.memory import PrefixIndex
+from repro.core.node_manager import NodeManager
+from repro.models.registry import get_model
+from repro.serving.backend import RealBackend
+from repro.serving.cost_model import CostModel, HardwareSpec
+from repro.serving.engine import NodeEngine
+from repro.serving.kv_cache import OutOfPages, PagedAllocator
+from repro.serving.transfer import OUT
+
+GEN = 6
+PAGE = 8
+SHARED = list(range(16))              # two full pages of common prefix
+SUF_A = [100, 101, 102, 103, 104]
+SUF_B = [120, 121, 122, 123, 124]
+# diverges from A's suffix mid-page (after 2 matching tokens)
+SUF_C = [100, 101, 200, 201, 202]
+
+
+def _cfg(kind: str):
+    n_kv = dict(mha=4, gqa=2)[kind]
+    return get_config("llama3-8b").reduced(dtype="float32", n_kv_heads=n_kv)
+
+
+def _setup(kind: str, seed: int = 0, **backend_kw):
+    cfg = _cfg(kind)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(seed))
+    cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+    cost.set_param_count(model.param_count())
+    mgr = NodeManager(0, cfg, cost)
+    be = RealBackend(cfg, model, params, mgr=mgr,
+                     **{**dict(n_pages=32, page_size=PAGE), **backend_kw})
+    eng = NodeEngine(0, cfg, cost, mgr, max_batch=4, backend=be)
+    return cfg, model, params, mgr, be, eng
+
+
+def _dense(cfg, model, params, turns, gen=GEN):
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    history, out = [], []
+    for t in turns:
+        history = history + list(t)
+        logits, cache = prefill(params, jnp.asarray([history], jnp.int32))
+        cache = model.grow_cache(cache, gen)
+        outs = []
+        for _ in range(gen):
+            nxt = jnp.argmax(logits[:, :cfg.vocab], -1).astype(jnp.int32)
+            outs.append(int(nxt[0]))
+            logits, cache = decode(params, cache, nxt)
+        out.append(outs)
+        history = history + outs
+    return out
+
+
+def _check(mgr, be):
+    for a in be.alloc:
+        a.check()
+    mgr.store.check()
+
+
+def _serve(eng, mgr, be, reqs, now=0.0, hook=None):
+    for r in reqs:
+        eng.submit(r)
+    while eng.waiting or eng.running:
+        now += eng.step(now)
+        _check(mgr, be)
+        if hook is not None:
+            hook(now)
+    return now
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex: the chained-hash lookup itself
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_register_lookup_depths():
+    ix = PrefixIndex(page_size=4)
+    ids = list(range(11))                       # 2 full pages + 3 tail
+    assert ix.register("a", ids) == 2
+    assert ix.lookup(ids) == ("a", 2)
+    assert ix.lookup(ids[:8]) == ("a", 2)
+    assert ix.lookup(ids[:7]) == ("a", 1)       # only one full page matches
+    assert ix.lookup(ids[:3]) == (None, 0)      # no full page at all
+    # chained keys: a matching chunk at the wrong depth must not hit
+    assert ix.lookup(ids[4:]) == (None, 0)
+
+
+def test_prefix_index_first_registrant_wins_and_drop():
+    ix = PrefixIndex(page_size=4)
+    ids = list(range(8))
+    ix.register("a", ids)
+    ix.register("b", ids + [9, 9, 9, 9])        # deeper, same first chunks
+    assert ix.lookup(ids) == ("a", 2)           # a keeps the shallow keys
+    assert ix.lookup(ids + [9, 9, 9, 9]) == ("b", 3)
+    ix.drop("a")
+    assert ix.lookup(ids) == (None, 0)          # a's keys gone with it ...
+    assert ix.lookup(ids + [9, 9, 9, 9]) == ("b", 3)   # ... b's stay
+    assert ix.lookup(ids, exclude="b") == (None, 0)
+    ix.clear()
+    assert ix.lookup(ids + [9, 9, 9, 9]) == (None, 0)
+
+
+def test_prefix_index_divergent_chunk_breaks_the_chain():
+    ix = PrefixIndex(page_size=4)
+    ix.register("a", list(range(12)))
+    probe = list(range(8)) + [77, 77, 77, 77]   # third chunk diverges
+    assert ix.lookup(probe) == ("a", 2)
+    probe = [77, 77, 77, 77] + list(range(4, 12))   # FIRST chunk diverges:
+    assert ix.lookup(probe) == (None, 0)            # later matches can't hit
+
+
+# ---------------------------------------------------------------------------
+# PagedAllocator: share / fork_cow / ref / unref semantics
+# ---------------------------------------------------------------------------
+
+def test_share_refcounts_and_free_decrements():
+    a = PagedAllocator(n_pages=8, page_size=4)
+    a.allocate("donor", 8)                      # 2 pages
+    pages = list(a.seqs["donor"].pages)
+    a.share("adopter", pages, 8)
+    assert [a.refcount_of(p) for p in pages] == [2, 2]
+    assert a.used_pages == 2                    # physical: shared counts once
+    a.check()
+    assert a.free("donor") == 2                 # detach, pages NOT freed
+    assert [a.refcount_of(p) for p in pages] == [1, 1]
+    assert a.used_pages == 2
+    a.check()
+    a.free("adopter")                           # last holder: pages freed
+    assert a.used_pages == 0
+    a.check()
+
+
+def test_share_rejects_misaligned_span_and_unheld_pages():
+    a = PagedAllocator(n_pages=8, page_size=4)
+    a.allocate("donor", 8)
+    pages = list(a.seqs["donor"].pages)
+    with pytest.raises(AssertionError):
+        a.share("x", pages, 3)                  # 3 tokens need 1 page, got 2
+    with pytest.raises(AssertionError):
+        a.share("y", [7], 4)                    # page 7 is free, not held
+    a.check()
+
+
+def test_fork_cow_sole_holder_writes_in_place():
+    a = PagedAllocator(n_pages=4, page_size=4)
+    a.allocate("s", 6)
+    assert a.fork_cow("s", 1) is None           # refcount 1: no copy needed
+    assert a.stats["cow_forks"] == 0
+    a.check()
+
+
+def test_fork_cow_remaps_writer_and_conserves_refcounts():
+    a = PagedAllocator(n_pages=8, page_size=4)
+    a.allocate("donor", 6)
+    pages = list(a.seqs["donor"].pages)
+    a.share("adopter", pages, 6)
+    old, new = a.fork_cow("adopter", 1)
+    assert old == pages[1] and new not in pages
+    assert a.seqs["adopter"].pages == [pages[0], new]
+    assert a.seqs["donor"].pages == pages       # donor untouched
+    assert a.refcount_of(old) == 1 and a.refcount_of(new) == 1
+    assert a.refcount_of(pages[0]) == 2
+    assert a.stats["cow_forks"] == 1
+    a.check()
+    # after the fork the donor is sole holder: its own write needs no copy
+    assert a.fork_cow("donor", 1) is None
+
+
+def test_fork_cow_out_of_pages_mutates_nothing():
+    a = PagedAllocator(n_pages=2, page_size=4)
+    a.allocate("donor", 8)
+    pages = list(a.seqs["donor"].pages)
+    a.share("adopter", pages, 8)
+    with pytest.raises(OutOfPages):
+        a.fork_cow("adopter", 0)
+    assert a.seqs["adopter"].pages == pages
+    assert a.refcount_of(pages[0]) == 2
+    a.check()
+
+
+def test_ref_unref_pins_keep_pages_alive():
+    a = PagedAllocator(n_pages=4, page_size=4)
+    a.allocate("s", 8)
+    pages = list(a.seqs["s"].pages)
+    a.ref(pages)
+    a.free("s")                                 # pin outlives the sequence
+    assert a.used_pages == 2
+    a.check()
+    a.unref(pages)
+    assert a.used_pages == 0
+    a.check()
+    with pytest.raises(AssertionError):
+        a.unref(pages)                          # double-unref must not pass
+
+
+def test_lease_of_shared_page_keeps_it_for_other_holders():
+    """A sharer's swap-out leases the shared pages; releasing the lease
+    must NOT free them while other sequences still reference them."""
+    a = PagedAllocator(n_pages=8, page_size=4)
+    a.allocate("donor", 8)
+    pages = list(a.seqs["donor"].pages)
+    a.share("adopter", pages, 8)
+    leased = a.lease("adopter")
+    assert leased == pages
+    assert [a.refcount_of(p) for p in pages] == [1, 1]   # donor's holds
+    a.check()
+    a.release(leased)
+    assert a.used_pages == 2                    # donor still owns them
+    a.check()
+    # and two overlapping leases of the same page must both be honoured
+    a.share("x", pages, 8)
+    a.share("y", pages, 8)
+    lx, ly = a.lease("x"), a.lease("y")
+    assert a.leased[pages[0]] == 2
+    a.release(lx)
+    assert a.leased[pages[0]] == 1              # y's transfer still reading
+    a.release(ly)
+    a.check()
+    a.free("donor")
+    assert a.used_pages == 0
+    a.check()
+
+
+# ---------------------------------------------------------------------------
+# token-exact parity: boundary + mid-page divergence, MHA + GQA
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["mha", "gqa"])
+def test_shared_system_prompt_parity(kind):
+    """Donor A completes; B diverges at the page boundary (no fork), C
+    diverges mid-page (CoW fork on every layer).  All three outputs must
+    equal their independent dense references, with the shared span never
+    prefillled twice and the physical footprint sublinear."""
+    cfg, model, params, mgr, be, eng = _setup(kind)
+    prompts = dict(A=SHARED + SUF_A, B=SHARED + SUF_B, C=SHARED + SUF_C)
+    want = {s: _dense(cfg, model, params, [p])[0] for s, p in prompts.items()}
+    reqs = {s: InferenceRequest(session_id=s, prompt_tokens=len(p),
+                                max_new_tokens=GEN, prompt_ids=list(p))
+            for s, p in prompts.items()}
+    now = _serve(eng, mgr, be, [reqs["A"]])
+    assert be.stats["prefix_hits"] == 0         # nothing indexed before A
+    _serve(eng, mgr, be, [reqs["B"], reqs["C"]], now)
+    for s in prompts:
+        assert reqs[s].output_ids == want[s], \
+            f"token divergence ({kind}/{s}): {reqs[s].output_ids} {want[s]}"
+    # B adopted the 16-token aligned prefix; C extended 2 tokens into A's
+    # partial third page (16 + 2)
+    assert eng.stats["shared_prefix_tokens"] == 16 + 18
+    assert be.stats["prefix_hits"] == 2
+    assert be.stats["shared_tokens"] == 34
+    # only C wrote into a still-shared page: one fork per layer
+    assert be.stats["cow_forks"] == cfg.n_layers
+    assert all(a.stats["cow_forks"] == 1 for a in be.alloc)
+    # footprint: the two shared pages exist ONCE, not three times
+    unshared = sum(be.alloc[0].pages_for(be.seqs[s].n_kv) for s in prompts)
+    assert be.alloc[0].used_pages <= unshared - 4
+    shared_pages = be.alloc[0].seqs["A"].pages[:2]
+    assert [be.alloc[0].refcount_of(p) for p in shared_pages] == [3, 3]
+    _check(mgr, be)
+    # the byte ledger never double-charges a shared page: entries' HBM
+    # bytes stay within the physical pool
+    assert mgr.store.used["hbm"] <= \
+        be.alloc[0].used_pages * be._layer_page_bytes * cfg.n_layers
+    assert mgr.store.entries["B"].shared_tokens == 16
+
+
+def test_full_prompt_adoption_caps_at_one_pending_token():
+    """A prompt IDENTICAL to an indexed prefix still prefills its last
+    token (a lane must process >= 1 token); everything before it shares."""
+    cfg, model, params, mgr, be, eng = _setup("gqa")
+    prompt = SHARED + SUF_A
+    want = _dense(cfg, model, params, [prompt])[0]
+    r1 = InferenceRequest(session_id="A", prompt_tokens=len(prompt),
+                          max_new_tokens=GEN, prompt_ids=list(prompt))
+    now = _serve(eng, mgr, be, [r1])
+    r2 = InferenceRequest(session_id="twin", prompt_tokens=len(prompt),
+                          max_new_tokens=GEN, prompt_ids=list(prompt))
+    _serve(eng, mgr, be, [r2], now)
+    assert r2.output_ids == want
+    assert eng.stats["shared_prefix_tokens"] == len(prompt) - 1
+    assert eng.stats["prefill_tokens"] == len(prompt) + 1
+    _check(mgr, be)
+
+
+def test_concurrent_divergence_donor_forks_first():
+    """The donor's next turn and an adopter of its FULL history (mid-page)
+    run in the same fused step: the donor hits the shared partial page
+    first and forks; the adopter inherits sole ownership and writes in
+    place.  Both must stay token-exact."""
+    cfg, model, params, mgr, be, eng = _setup("mha", seed=2)
+    p1, p2 = SHARED + SUF_A, [31, 32, 33, 34]
+    want_a = _dense(cfg, model, params, [p1, p2])
+    ra1 = InferenceRequest(session_id="A", prompt_tokens=len(p1),
+                           max_new_tokens=GEN, prompt_ids=list(p1))
+    now = _serve(eng, mgr, be, [ra1])
+    assert ra1.output_ids == want_a[0]
+    # D's prompt extends A's full written history (prompt + first GEN-1
+    # generated tokens — the last one is still pending, its KV unwritten)
+    hist = p1 + ra1.output_ids[:GEN - 1]
+    assert len(hist) == be.seqs["A"].n_kv and len(hist) % PAGE != 0
+    pd = hist + [210, 211, 212]
+    want_d = _dense(cfg, model, params, [pd])[0]
+    ra2 = InferenceRequest(session_id="A", prompt_tokens=len(p2),
+                           max_new_tokens=GEN, prompt_ids=list(p2),
+                           cached_tokens=be.session_tokens("A"))
+    rd = InferenceRequest(session_id="D", prompt_tokens=len(pd),
+                          max_new_tokens=GEN, prompt_ids=list(pd))
+    _serve(eng, mgr, be, [ra2, rd], now)
+    assert ra2.output_ids == want_a[1]
+    assert rd.output_ids == want_d
+    assert eng.stats["shared_prefix_tokens"] == len(hist)
+    # exactly ONE fork per layer happened (the donor's); D wrote in place
+    assert be.stats["cow_forks"] == cfg.n_layers
+    _check(mgr, be)
+
+
+def test_preempt_resume_sharer_while_other_decodes():
+    """Two adopters of one donor decode concurrently; one is preempted
+    (swap-out leases the shared pages) and resumes on private pages while
+    the other keeps decoding through the shared ones."""
+    cfg, model, params, mgr, be, eng = _setup("gqa", seed=3)
+    prompts = dict(X=SHARED + SUF_A, A=SHARED + SUF_B, B=SHARED + SUF_C)
+    want = {s: _dense(cfg, model, params, [p])[0] for s, p in prompts.items()}
+    rx = InferenceRequest(session_id="X", prompt_tokens=21,
+                          max_new_tokens=GEN, prompt_ids=list(prompts["X"]))
+    now = _serve(eng, mgr, be, [rx])
+    ra = InferenceRequest(session_id="A", prompt_tokens=21, arrival=0.0,
+                          max_new_tokens=GEN, prompt_ids=list(prompts["A"]))
+    rb = InferenceRequest(session_id="B", prompt_tokens=21, arrival=1.0,
+                          max_new_tokens=GEN, prompt_ids=list(prompts["B"]))
+    state = dict(done=False)
+
+    def hook(_now):
+        if not state["done"] and rb.generated >= GEN // 2 and eng.running:
+            victim = eng.preempt_one(_now)      # youngest: B
+            assert victim is rb
+            # the swap-out is in flight over pages the survivors still
+            # reference — leased AND refcounted at once
+            a0 = be.alloc[0]
+            shared = a0.seqs["X"].pages[:2]
+            assert any(p in a0.leased for p in shared)
+            assert all(a0.refcount_of(p) >= 2 for p in shared)
+            _check(mgr, be)
+            state["done"] = True
+
+    _serve(eng, mgr, be, [ra, rb], now, hook=hook)
+    assert state["done"] and eng.stats["preemptions"] == 1
+    for s in prompts:
+        got = {"X": rx, "A": ra, "B": rb}[s].output_ids
+        assert got == want[s], f"{s}: {got} vs {want[s]}"
+    assert be.stats["prefix_hits"] == 2
+    assert not be.alloc[0].leased               # every lease reconciled
+    _check(mgr, be)
+
+
+# ---------------------------------------------------------------------------
+# the satellite regression: drop while a shared page's transfer is in flight
+# ---------------------------------------------------------------------------
+
+def test_drop_donor_with_leased_shared_pages_keeps_sharer_alive():
+    """Regression (latent bug): dropping a session whose pages are still
+    leased by an in-flight swap-out used to assume sole ownership.  With a
+    sharer attached, the drop must (a) not free the shared pages, (b)
+    remove the donor's prefix-index entries, and (c) leave the sharer
+    serving token-exact KV."""
+    cfg, model, params, mgr, be, eng = _setup("mha", seed=4)
+    pa, pb = SHARED + SUF_A, SHARED + SUF_B
+    want_b = _dense(cfg, model, params, [pb, [41, 42, 43]])
+    ra = InferenceRequest(session_id="A", prompt_tokens=len(pa),
+                          max_new_tokens=GEN, prompt_ids=list(pa))
+    now = _serve(eng, mgr, be, [ra])
+    rb = InferenceRequest(session_id="B", prompt_tokens=len(pb),
+                          max_new_tokens=GEN, prompt_ids=list(pb))
+    now = _serve(eng, mgr, be, [rb], now)
+    assert rb.output_ids == want_b[0]
+    a0 = be.alloc[0]
+    shared = list(a0.seqs["A"].pages[:2])
+    assert [a0.refcount_of(p) for p in shared] == [2, 2]
+    # launch A's swap-out: every page of A — including the shared ones —
+    # is leased by the in-flight device->host copy
+    be.swap_out("A", be.session_tokens("A"))
+    assert be.transfers.pending_for("A", OUT)
+    assert all(a0.leased.get(p) == 1 for p in shared)
+    # ... and drop A mid-flight (store + backend, the manager path)
+    mgr.drop_session("A")
+    _check(mgr, be)
+    assert "A" not in mgr.store.entries and "A" not in be.seqs
+    # the shared pages survived for B; A's private pages went home
+    assert all(a0.refcount_of(p) == 1 for p in shared)
+    assert all(p not in a0.free_list for p in shared)
+    assert not a0.leased
+    # no index entry points at the dead donor (B's own registration, made
+    # at ITS finish, legitimately covers the same chunks)
+    assert all(sid != "A" for sid, _ in be.prefix.chains.values())
+    # B keeps serving through the shared pages, token-exact
+    rb2 = InferenceRequest(session_id="B", prompt_tokens=3,
+                           max_new_tokens=GEN, prompt_ids=[41, 42, 43],
+                           cached_tokens=be.session_tokens("B"))
+    _serve(eng, mgr, be, [rb2], now)
+    assert rb2.output_ids == want_b[1]
+    _check(mgr, be)
+
+
+def test_store_drop_forgets_prefix_of_never_admitted_session():
+    """TieredKVStore.drop must clear prefix entries even for a session the
+    store never admitted (dropped mid-serve, before its first
+    mark_resident)."""
+    from repro.core.memory import TieredKVStore
+    s = TieredKVStore(hbm_budget=1000, host_budget=1000)
+    s.prefix = PrefixIndex(page_size=4)
+    s.prefix.register("ghost", list(range(8)))
+    s.drop("ghost")                             # not in s.entries
+    assert s.prefix.lookup(list(range(8))) == (None, 0)
+    s.check()
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: route prefers the node holding the prefix
+# ---------------------------------------------------------------------------
+
+def test_cluster_route_prefers_prefix_node_and_saves_prefill():
+    from repro.serving.scenario import (SharedPrefixTrace, dense_reference,
+                                        session_outputs)
+    from repro.serving.simulator import ClusterRuntime
+    cfg = _cfg("gqa")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(5))
+    rt = ClusterRuntime(cfg, n_nodes=3, policy="symphony",
+                        hw=HardwareSpec(chips_per_replica=1), max_batch=8,
+                        mode="real", model=model, params=params,
+                        n_pages=48, page_size=PAGE)
+    trace = SharedPrefixTrace(cfg, n_sessions=4, shared_len=16,
+                              suffix_len=4, gen=4, seed=7)
+    try:
+        res = rt.run(trace)
+        got = session_outputs(res)
+        want = dense_reference(cfg, model, params, trace.prompts, 4)
+        assert got == want, (got, want)
+        # the whole cohort landed on the donor's node ...
+        nodes = {r.node_id for r in res.completed}
+        assert len(nodes) == 1, f"cohort split across nodes {nodes}"
+        node = nodes.pop()
+        eng = rt.engines[node]
+        # ... and the three sharers adopted the 16-token aligned prefix
+        assert eng.stats["shared_prefix_tokens"] == 3 * 16
+        total_prompt = sum(len(t[0]) for t in trace.prompts.values())
+        assert eng.stats["prefill_tokens"] == total_prompt - 3 * 16
+        assert rt.backends[node].stats["prefix_hits"] == 3
+        for a in rt.backends[node].alloc:
+            a.check()
+        for mgr in rt.managers.values():
+            mgr.store.check()
+    finally:
+        rt.cleanup()

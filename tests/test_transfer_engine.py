@@ -270,6 +270,147 @@ def test_poisoned_payload_raises_lost_kv_not_phantom():
         eng.step(0.0)
 
 
+def test_crash_with_shared_page_swap_out_in_flight(tmp_path):
+    """Crash while a SHARED page's swap-out is in flight.  Donor X finished
+    and its snapshot landed durably in the spool; sharer A adopted X's
+    16-token prefix copy-on-write, so A's swap-out leases pages X still
+    holds.  The crash must poison A's in-flight copy without poisoning X:
+    leases and refcounts reconcile to nothing, the prefix index forgets
+    both sessions, A's snapshot never lands — and X recovers token-exact
+    from the durable spool on a fresh node (no phantom KV from the shared
+    span's double bookkeeping)."""
+    cost, mgr, be, eng = _node(n_pages=48, spool_dir=str(tmp_path / "dead"))
+    donor_prompt = _turns((16,), seed=12)[0]      # exactly 2 full pages
+    want_x = _dense_reference([donor_prompt, [9, 8, 7]])
+    now = _serve_to_end(eng, InferenceRequest(
+        "X", prompt_tokens=16, max_new_tokens=GEN,
+        prompt_ids=list(donor_prompt)), mgr, be)
+    mgr.flush_session("X", now)
+    be.drain_transfers()                          # X's snapshot lands
+    assert (tmp_path / "dead" / "X.npz").exists()
+    donor_tokens = be.session_tokens("X")
+
+    # the sharer: same 16-token prefix, suffix forced to diverge at token
+    # 16 (so the adopted span is exactly the two page-aligned shared pages)
+    suffix = [(want_x[0][0] + 1) % CFG.vocab, 7, 7, 7]
+    want_a = _dense_reference([donor_prompt + suffix])
+    req_a = InferenceRequest("A", prompt_tokens=20, max_new_tokens=GEN,
+                             prompt_ids=list(donor_prompt) + suffix)
+    now = _serve_to_end(eng, req_a, mgr, be, now)
+    assert req_a.output_ids == want_a[0]
+    assert be.stats["prefix_hits"] == 1
+    a0 = be.alloc[0]
+    shared = list(a0.seqs["X"].pages[:2])
+    assert all(p in a0.seqs["A"].pages for p in shared)
+    assert all(a0.refcount_of(p) == 2 for p in shared)
+
+    # A's swap-out leases the shared pages OUT from under X's live refs
+    be.swap_out("A", be.session_tokens("A"))
+    assert be.transfers.pending_for("A", OUT)
+    assert all(p in a0.leased for p in shared)
+    assert all(a0.refcount_of(p) == 1 for p in shared)   # X's hold remains
+    assert all(p in a0.seqs["X"].pages for p in shared)
+    _check_invariants(mgr, be)
+
+    be.crash()                                    # the copy never lands
+    assert be.transfers.pending == 0
+    assert be.transfers.stats["poisoned"] >= 1
+    assert be.host == {} and be.seqs == {}
+    assert not be.prefix.chains and not be.prefix.by_sid
+    for a in be.alloc:
+        assert a.used_pages == 0 and not a.leased
+        a.check()
+    assert not (tmp_path / "dead" / "A.npz").exists()
+    assert be.recover_session("A") is None        # A: nothing recoverable
+    assert (tmp_path / "dead" / "X.npz").exists()  # X: durable copy intact
+    mgr.crash()
+    assert "A" not in mgr.store.entries
+    assert mgr.store.entries["X"].on_disk
+
+    # X recovers on a fresh node and serves turn 2 token-exact: the crash
+    # of a sharer mid-swap-out corrupted nothing the donor depends on
+    cost2 = CostModel(CFG, HardwareSpec(chips_per_replica=1))
+    cost2.set_param_count(MODEL.param_count())
+    mgr2 = NodeManager(1, CFG, cost2)
+    be2 = RealBackend(CFG, MODEL, PARAMS, mgr=mgr2, n_pages=32, page_size=8,
+                      spool_dir=str(tmp_path / "live"))
+    eng2 = NodeEngine(1, CFG, cost2, mgr2, max_batch=4, backend=be2)
+    assert mgr2.recover_from_spool("X", mgr, now=now + 1.0)
+    assert mgr2.stats["recoveries"] == 1
+    req_x2 = InferenceRequest("X", prompt_tokens=3, max_new_tokens=GEN,
+                              prompt_ids=[9, 8, 7],
+                              cached_tokens=donor_tokens)
+    _serve_to_end(eng2, req_x2, mgr2, be2, now + 2.0)
+    assert req_x2.output_ids == want_x[1]
+
+
+def test_cluster_mark_failed_reconciles_shared_refcounts():
+    """Cluster-level: the prefix-routed sharing cohort all lands on one
+    node; a sharer's swap-out is put in flight over pages the donor still
+    references, then that node is failed through the runtime's path
+    (`mark_failed` -> backend poison -> manager crash).  Refcounts, leases
+    and the prefix index must reconcile to empty on the dead node, and
+    every survivor must complete a follow-up turn token-exact on a live
+    node via spool recovery or full recompute — never phantom KV."""
+    from repro.serving.scenario import (SharedPrefixTrace, dense_reference,
+                                        session_outputs)
+    from repro.serving.simulator import ClusterRuntime
+    rt = ClusterRuntime(CFG, n_nodes=2, policy="symphony",
+                        hw=HardwareSpec(chips_per_replica=1), max_batch=4,
+                        mode="real", model=MODEL, params=PARAMS,
+                        n_pages=48, page_size=8)
+    trace = SharedPrefixTrace(CFG, n_sessions=3, shared_len=16,
+                              suffix_len=4, gen=4, seed=13)
+    try:
+        res = rt.run(trace)
+        want = dense_reference(CFG, MODEL, PARAMS, trace.prompts, 4)
+        assert session_outputs(res) == want
+        nodes = {r.node_id for r in res.completed}
+        assert len(nodes) == 1                    # prefix routing converged
+        node = nodes.pop()
+        be, mgr = rt.backends[node], rt.managers[node]
+        be.drain_transfers()                      # completion flushes land
+        a0 = be.alloc[0]
+        shared = list(a0.seqs["s0000"].pages[:2])
+        assert all(a0.refcount_of(p) >= 2 for p in shared)
+        # a sharer's swap-out in flight over the donor's shared pages
+        be.swap_out("s0001", be.session_tokens("s0001"))
+        assert be.transfers.pending_for("s0001", OUT)
+        assert any(p in a0.leased for p in shared)
+        now = max(r.finished_at for r in res.completed) + 1.0
+        rt._fail(node, now, lambda *a: None)
+        for a in rt.backends[node].alloc:
+            assert a.used_pages == 0 and not a.leased
+            a.check()
+        assert be.transfers.pending == 0
+        assert be.transfers.stats["poisoned"] >= 1
+        assert not be.prefix.chains
+
+        # survivors: one more turn per session, dispatched through the
+        # runtime's recovery-aware path onto the live node
+        follow = [50, 51, 52]
+        for sid in trace.prompts:
+            trace.prompts[sid].append(list(follow))
+        want2 = dense_reference(CFG, MODEL, PARAMS, trace.prompts, 4)
+        live = next(j for j in rt.engines if j != node)
+        reqs = {}
+        for sid in trace.prompts:
+            reqs[sid] = InferenceRequest(
+                session_id=sid, prompt_tokens=len(follow),
+                max_new_tokens=4, prompt_ids=list(follow), arrival=now)
+            rt._dispatch(reqs[sid], now, lambda *a: None)
+        eng2 = rt.engines[live]
+        while eng2.waiting or eng2.running:
+            now += eng2.step(now)
+        for sid, r in reqs.items():
+            assert r.output_ids == want2[sid][1], sid
+        for a in rt.backends[live].alloc:
+            a.check()
+        rt.managers[live].store.check()
+    finally:
+        rt.cleanup()
+
+
 def test_real_cluster_crash_mid_transfer_token_exact():
     """Cluster-level crash-mid-transfer: the full failure scenario stays
     token-exact with async migration — in-flight transfers on the dead
