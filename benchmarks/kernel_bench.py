@@ -533,6 +533,152 @@ def bench_sharing(n_sessions: int = 1000, shared_len: int = 64,
     return out
 
 
+def bench_recurrent(ctx_len: int = 768, gen: int = 8,
+                    headroom_tokens: int = 4096, kernel_mode: str = None):
+    """Recurrent-state mode: the SYMPHONY "cheapest migration" observable.
+
+    A session with ``ctx_len`` tokens of context is swapped to the host
+    tier and cold-resumed on two node kinds at the same reduced scale:
+
+    * KV — llama3-8b through `RealBackend`: the swap-in scatters
+      O(ctx_len) paged KV bytes, and the admitting step's fence pays for
+      the full linear copy;
+    * recurrent — mamba2-2.7b through `StateBackend`: the whole session is
+      ONE fixed-size slot blob, so the copy (and the stall) is O(1) — the
+      same bytes at any context length.
+
+    The headline pair is ``swap_bytes_ratio`` (KV bytes over state bytes at
+    ``ctx_len`` — grows with context by construction) and the analytic
+    ``sessions_per_node`` headroom at FULL model scale on equal hardware:
+    HBM-resident sessions of ``headroom_tokens`` context each, where the
+    recurrent family's O(1) state admits a multiple of the transformer's
+    linear-KV count.  ``parity_ok`` serves a short multi-turn mamba2
+    conversation through the engine with a swap round trip between turns
+    and must match the dense reference token-for-token — the bench is only
+    meaningful while the slot path is exact."""
+    from repro.configs import get_config
+    from repro.core.advisory import InferenceRequest
+    from repro.core.node_manager import NodeManager
+    from repro.models.registry import get_model
+    from repro.serving.backend import make_backend
+    from repro.serving.cost_model import CostModel, HardwareSpec
+    from repro.serving.engine import NodeEngine
+    from repro.serving.scenario import dense_reference
+
+    if kernel_mode is None:
+        kernel_mode = "auto" if jax.default_backend() == "tpu" else "ref"
+
+    def _node(arch, seed=0, **kw):
+        cfg = get_config(arch).reduced(dtype="float32")
+        model = get_model(cfg)
+        params = model.init(jax.random.key(seed))
+        cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+        cost.set_param_count(model.param_count())
+        mgr = NodeManager(0, cfg, cost)
+        be = make_backend(cfg, model, params, mgr=mgr, trace_logits=False,
+                          kernel_mode=kernel_mode, **kw)
+        eng = NodeEngine(0, cfg, cost, mgr, max_batch=8, backend=be,
+                         token_budget=255)
+        return cfg, model, params, mgr, be, eng
+
+    def _cold_resume(arch, **kw):
+        """Build ctx_len tokens, warm every bucket (incl. the swap-in
+        scatter), then measure the cold-resume fence stall + copied bytes."""
+        cfg, model, params, mgr, be, eng = _node(arch, **kw)
+        rng = np.random.default_rng(0)
+        state = dict(now=0.0)
+
+        def serve(sid, plen, g=gen):
+            p = list(map(int, rng.integers(0, cfg.vocab, plen)))
+            eng.submit(InferenceRequest(
+                session_id=sid, prompt_tokens=plen, max_new_tokens=g,
+                prompt_ids=p, cached_tokens=be.session_tokens(sid)))
+            while (any(r.req.session_id == sid for r in eng.running)
+                   or sid in [r.session_id for r in eng.waiting]):
+                state["now"] += eng.step(state["now"])
+
+        serve("vip", ctx_len)
+        be.swap_out("vip", be.session_tokens("vip"))
+        be.drain_transfers()
+        serve("vip", 8)                       # warm the swap-in buckets
+        be.swap_out("vip", be.session_tokens("vip"))
+        be.drain_transfers()
+        base_stall = eng.stats["stall_s"]
+        base_copied = be.stats["copied_bytes"]
+        t0 = time.perf_counter()
+        serve("vip", 8)                       # COLD resume: fence pays all
+        wall = time.perf_counter() - t0
+        n = be.session_tokens("vip")
+        return dict(
+            arch=arch,
+            stall_cold_ms=(eng.stats["stall_s"] - base_stall) * 1e3,
+            resume_wall_ms=wall * 1e3,
+            swap_in_bytes=be.stats["copied_bytes"] - base_copied,
+            resident_bytes=be.session_kv_bytes(n),
+            resident_bytes_half_ctx=be.session_kv_bytes(n // 2),
+            session_tokens=n,
+            swaps_in=be.stats["swaps_in"],
+        )
+
+    kv = _cold_resume("llama3-8b",
+                      n_pages=(ctx_len + 128) // 16 + 24, page_size=16)
+    rec = _cold_resume("mamba2-2.7b", n_slots=4)
+
+    # engine-level parity with a swap round trip between turns: the bench's
+    # own correctness spot-check (token-exact or the numbers are void)
+    cfg, model, params, mgr, be, eng = _node("mamba2-2.7b", seed=3,
+                                             n_slots=4)
+    rng = np.random.default_rng(3)
+    turns = [list(map(int, rng.integers(0, cfg.vocab, n))) for n in (11, 9)]
+    want = dense_reference(cfg, model, params, {"p0": turns}, gen)["p0"]
+    got, now = [], 0.0
+    for t in turns:
+        req = InferenceRequest(session_id="p0", prompt_tokens=len(t),
+                               max_new_tokens=gen, prompt_ids=list(t),
+                               cached_tokens=be.session_tokens("p0"))
+        eng.submit(req)
+        while eng.waiting or eng.running:
+            now += eng.step(now)
+        got.append(req.output_ids)
+        be.swap_out("p0", be.session_tokens("p0"))
+        be.drain_transfers()
+    parity_ok = got == want
+
+    # sessions/node headroom at FULL scale, equal hardware: analytic HBM
+    # budget over per-session state bytes at headroom_tokens of context
+    headroom = {}
+    for arch in ("llama3-8b", "mamba2-2.7b"):
+        cost = CostModel(get_config(arch), HardwareSpec())
+        per = cost.session_kv_bytes(headroom_tokens)
+        headroom[arch] = dict(
+            session_bytes=per,
+            sessions_per_node=cost.hbm_kv_budget() / per)
+
+    out = dict(
+        ctx_len=ctx_len, gen=gen, kernel_mode=kernel_mode,
+        headroom_tokens=headroom_tokens,
+        kv=kv, recurrent=rec,
+        swap_bytes_ratio=kv["resident_bytes"] / rec["resident_bytes"],
+        # O(1) state: resident bytes must not depend on context length
+        state_bytes_flat=(rec["resident_bytes"]
+                          == rec["resident_bytes_half_ctx"]),
+        headroom=headroom,
+        headroom_ratio=(headroom["mamba2-2.7b"]["sessions_per_node"]
+                        / headroom["llama3-8b"]["sessions_per_node"]),
+        parity_ok=bool(parity_ok),
+    )
+    emit("recurrent.swap_bytes_ratio", out["swap_bytes_ratio"],
+         f"kv={kv['resident_bytes']}B state={rec['resident_bytes']}B "
+         f"at ctx={ctx_len} flat={out['state_bytes_flat']} "
+         f"parity_ok={parity_ok}")
+    emit("recurrent.stall_cold_ms", rec["stall_cold_ms"],
+         f"kv_cold={kv['stall_cold_ms']:.2f}ms "
+         f"headroom_ratio={out['headroom_ratio']:.1f}x "
+         f"at {headroom_tokens} tok/session")
+    save("BENCH_recurrent", out)
+    return out
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -547,6 +693,10 @@ if __name__ == "__main__":
     ap.add_argument("--sharing-only", action="store_true",
                     help="run just the 1000-session prefix-sharing mode "
                          "(emits the BENCH_sharing.json artifact)")
+    ap.add_argument("--recurrent-only", action="store_true",
+                    help="run just the recurrent-state mode: O(1) slot-blob "
+                         "swap vs linear paged-KV swap + sessions/node "
+                         "headroom (emits the BENCH_recurrent.json artifact)")
     ap.add_argument("--prompt-len", type=int, default=4000)
     ap.add_argument("--token-budget", type=int, default=4)
     ap.add_argument("--sessions", type=int, default=1000)
@@ -561,6 +711,9 @@ if __name__ == "__main__":
     elif args.sharing_only:
         import json
         print(json.dumps(bench_sharing(n_sessions=args.sessions), indent=1))
+    elif args.recurrent_only:
+        import json
+        print(json.dumps(bench_recurrent(), indent=1))
     elif args.step:
         bench_step()
     else:

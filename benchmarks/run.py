@@ -4,12 +4,14 @@ by 1e6 into the us column; the derived field says what they mean).
 
 ``--serving`` aggregates the serving artifacts
 (results/bench/BENCH_step.json + BENCH_cluster.json, plus
-BENCH_sharing.json when present) into the top-level
-``results/bench/BENCH_serving.json`` scorecard: steady-state TBT
+BENCH_sharing.json and BENCH_recurrent.json when present) into the
+top-level ``results/bench/BENCH_serving.json`` scorecard: steady-state TBT
 median/p99, the long-prompt-interference TBT bound, the async swap-in
 overlap profile (advisory-led residual stall must stay ~0), the
 prefix-sharing footprint ratio (peak pages over the unshared cost for a
-1000-session shared-system-prompt cohort — must stay sublinear), cluster
+1000-session shared-system-prompt cohort — must stay sublinear), the
+recurrent-state profile (O(1) slot-blob swap bytes vs linear paged KV and
+the sessions/node headroom multiple, token-exact parity required), cluster
 throughput, compile counts, and copied bytes — the one file CI uploads and
 gates (decode-p99-under-interference must not regress vs the committed
 copy; footprint ratio bounded absolutely)."""
@@ -39,6 +41,9 @@ def aggregate_serving() -> dict:
     sharing_f = RESULTS / "BENCH_sharing.json"
     sharing = json.loads(sharing_f.read_text()) if sharing_f.exists() \
         else None      # optional locally; CI always emits it first
+    recurrent_f = RESULTS / "BENCH_recurrent.json"
+    recurrent = json.loads(recurrent_f.read_text()) \
+        if recurrent_f.exists() else None    # optional locally, like sharing
 
     cfgs = list(step["configs"].values())
     medians = sorted(c["decode_ms_median"] for c in cfgs
@@ -94,6 +99,20 @@ def aggregate_serving() -> dict:
             cow_forks=sharing.get("cow_forks"),
             parity_ok=sharing.get("parity_ok"),
         ),
+        recurrent=None if recurrent is None else dict(
+            ctx_len=recurrent.get("ctx_len"),
+            stall_cold_kv_ms=recurrent.get("kv", {}).get("stall_cold_ms"),
+            stall_cold_state_ms=recurrent.get("recurrent",
+                                              {}).get("stall_cold_ms"),
+            kv_resident_bytes=recurrent.get("kv", {}).get("resident_bytes"),
+            state_resident_bytes=recurrent.get("recurrent",
+                                               {}).get("resident_bytes"),
+            swap_bytes_ratio=recurrent.get("swap_bytes_ratio"),
+            state_bytes_flat=recurrent.get("state_bytes_flat"),
+            headroom_tokens=recurrent.get("headroom_tokens"),
+            headroom_ratio=recurrent.get("headroom_ratio"),
+            parity_ok=recurrent.get("parity_ok"),
+        ),
         compile_counts=step.get("compile_counts", {}),
         copied_bytes=sum(c.get("copied_bytes", 0.0) for c in cfgs),
     )
@@ -117,8 +136,8 @@ def main() -> None:
 
     from benchmarks import fig_serving, fig_tokens
     from benchmarks.roofline_table import emit_roofline
-    from benchmarks.kernel_bench import (bench_kernels, bench_sharing,
-                                         bench_step)
+    from benchmarks.kernel_bench import (bench_kernels, bench_recurrent,
+                                         bench_sharing, bench_step)
 
     t0 = time.time()
     sections = {
@@ -145,6 +164,7 @@ def main() -> None:
         "kernels": bench_kernels,
         "step": bench_step,
         "sharing": bench_sharing,
+        "recurrent": bench_recurrent,
     }
     for name, fn in sections.items():
         if args.only and args.only != name:

@@ -13,13 +13,14 @@ from repro.configs.granite_moe_3b import CONFIG as GRANITE_MOE_3B
 from repro.configs.qwen3_moe_30b import CONFIG as QWEN3_MOE_30B
 from repro.configs.seamless_m4t_medium import CONFIG as SEAMLESS_M4T_MEDIUM
 from repro.configs.zamba2_2_7b import CONFIG as ZAMBA2_2_7B
+from repro.configs.mamba2_2_7b import CONFIG as MAMBA2_2_7B
 from repro.configs.xlstm_1_3b import CONFIG as XLSTM_1_3B
 
 ARCHS = {
     c.name: c for c in [
         LLAMA3_8B, CODEQWEN15_7B, YI_6B, MINICPM_2B, PHI3_VISION_4_2B,
         GRANITE_MOE_3B, QWEN3_MOE_30B, SEAMLESS_M4T_MEDIUM, ZAMBA2_2_7B,
-        XLSTM_1_3B,
+        MAMBA2_2_7B, XLSTM_1_3B,
     ]
 }
 # short aliases for --arch
@@ -33,6 +34,7 @@ ALIASES = {
     "qwen3-moe-30b-a3b": "qwen3-moe-30b-a3b",
     "seamless-m4t-medium": "seamless-m4t-medium",
     "zamba2-2.7b": "zamba2-2.7b",
+    "mamba2-2.7b": "mamba2-2.7b",
     "xlstm-1.3b": "xlstm-1.3b",
 }
 

@@ -46,7 +46,7 @@ class XLSTMConfig:
 @dataclass(frozen=True)
 class ModelConfig:
     name: str
-    family: str                # dense | moe | encdec | hybrid | xlstm | vlm
+    family: str        # dense | moe | encdec | hybrid | mamba2 | xlstm | vlm
     n_layers: int
     d_model: int
     n_heads: int
@@ -159,6 +159,6 @@ SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
 
 def shapes_for(config: ModelConfig) -> Tuple[ShapeCell, ...]:
     """long_500k only for sub-quadratic (SSM/hybrid) archs — see DESIGN.md."""
-    if config.family in ("hybrid", "xlstm"):
+    if config.family in ("hybrid", "mamba2", "xlstm"):
         return ALL_SHAPES
     return (TRAIN_4K, PREFILL_32K, DECODE_32K)

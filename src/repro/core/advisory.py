@@ -22,6 +22,9 @@ class AdvisoryRequest:
     ordered: bool = False
     priority: Optional[int] = None             # higher = more important
     issued_at: float = 0.0
+    # node group serving this session's architecture: a recurrent-state
+    # session can only land on a node whose backend holds its state kind
+    group: str = "default"
 
 
 @dataclass
@@ -31,6 +34,7 @@ class InferenceRequest:
     max_new_tokens: int                         # response length target
     arrival: float = 0.0
     priority: int = 0
+    group: str = "default"                      # node group (architecture)
     request_id: int = field(default_factory=lambda: next(_req_counter))
     # real-mode payload (None in simulation)
     prompt_ids: Optional[list] = None
@@ -77,3 +81,4 @@ class SessionMeta:
     total_tokens: int = 0          # KV length currently cached
     kv_node: Optional[int] = None  # node currently holding the KV
     turns: int = 0
+    group: str = "default"         # immutable once set off the default

@@ -110,6 +110,12 @@ class KVEntry:
     # sessions (informational: the bytes ledger charges shared pages to
     # their first owner only, so per-entry bytes undercount by this span)
     shared_tokens: int = 0
+    # what the bytes ARE: "kv" (paged, layer-granular), "state" (one fixed
+    # recurrent blob), or "hybrid" (blob + windowed KV, still one unit).
+    # Placement logic is kind-agnostic — recurrent entries simply carry
+    # n_layers == 1 — but the ledger keeps per-kind totals so a mixed
+    # cluster can report where its memory actually goes
+    kind: str = "kv"
 
     def __post_init__(self):
         if not self.tier:
@@ -128,23 +134,37 @@ class TieredKVStore:
                  disk_budget: int = 1 << 50):
         self.budget = {HBM: hbm_budget, HOST: host_budget, DISK: disk_budget}
         self.used = {HBM: 0, HOST: 0, DISK: 0}
+        # per-state-kind breakdown of `used` (kv / state / hybrid): the
+        # mixed-cluster observability ledger, conserved by check()
+        self.used_kind: Dict[str, Dict[str, int]] = {
+            t: {} for t in TIER_ORDER}
         self.entries: Dict[str, KVEntry] = {}
         # cross-session prefix index (real-mode serving attaches one sized
         # to the backend's page geometry; sim mode leaves it None)
         self.prefix: Optional[PrefixIndex] = None
 
+    def _acct(self, tier: str, kind: str, delta: int) -> None:
+        """Single funnel for every byte movement: the tier total and its
+        per-kind breakdown can never diverge."""
+        self.used[tier] += delta
+        bk = self.used_kind[tier]
+        bk[kind] = bk.get(kind, 0) + delta
+        if bk[kind] == 0:
+            del bk[kind]
+
     # -- admission -------------------------------------------------------------
 
     def admit(self, session_id: str, n_tokens: int, bytes_per_layer: int,
               n_layers: int, tier: str = HOST, priority: int = 0,
-              on_disk: bool = False) -> KVEntry:
+              on_disk: bool = False, kind: str = "kv") -> KVEntry:
         assert session_id not in self.entries
         e = KVEntry(session_id, n_tokens, bytes_per_layer, n_layers,
-                    tier=[tier] * n_layers, priority=priority, on_disk=on_disk)
+                    tier=[tier] * n_layers, priority=priority,
+                    on_disk=on_disk, kind=kind)
         self.entries[session_id] = e
-        self.used[tier] += e.total_bytes
+        self._acct(tier, kind, e.total_bytes)
         if on_disk:
-            self.used[DISK] += e.total_bytes
+            self._acct(DISK, kind, e.total_bytes)
         return e
 
     def drop(self, session_id: str) -> None:
@@ -157,23 +177,23 @@ class TieredKVStore:
         if e is None:
             return
         for l, t in enumerate(e.tier):
-            self.used[t] -= e.bytes_per_layer
+            self._acct(t, e.kind, -e.bytes_per_layer)
         if e.on_disk:
-            self.used[DISK] -= e.total_bytes
+            self._acct(DISK, e.kind, -e.total_bytes)
 
     def grow(self, session_id: str, new_tokens: int,
              new_bytes_per_layer: int) -> None:
         """After a turn, the session KV grew; it is resident in HBM."""
         e = self.entries[session_id]
         for l, t in enumerate(e.tier):
-            self.used[t] -= e.bytes_per_layer
+            self._acct(t, e.kind, -e.bytes_per_layer)
         if e.on_disk:
-            self.used[DISK] -= e.total_bytes
+            self._acct(DISK, e.kind, -e.total_bytes)
             e.on_disk = False      # disk copy is stale after growth
         e.n_tokens += new_tokens
         e.bytes_per_layer = new_bytes_per_layer
         e.tier = [HBM] * e.n_layers
-        self.used[HBM] += e.total_bytes
+        self._acct(HBM, e.kind, e.total_bytes)
 
     # -- placement -------------------------------------------------------------
 
@@ -186,8 +206,8 @@ class TieredKVStore:
         src = e.tier[layer]
         if src == dst:
             return 0
-        self.used[src] -= e.bytes_per_layer
-        self.used[dst] += e.bytes_per_layer
+        self._acct(src, e.kind, -e.bytes_per_layer)
+        self._acct(dst, e.kind, e.bytes_per_layer)
         e.tier[layer] = dst
         return e.bytes_per_layer
 
@@ -197,7 +217,7 @@ class TieredKVStore:
         if e.on_disk:
             return 0
         e.on_disk = True
-        self.used[DISK] += e.total_bytes
+        self._acct(DISK, e.kind, e.total_bytes)
         return e.total_bytes
 
     # -- the paper's priority scheme ---------------------------------------------
@@ -250,17 +270,24 @@ class TieredKVStore:
 
     def check(self) -> None:
         """Byte-conservation invariant: per-tier accounting equals the sum
-        over entries (layer placements + persistent disk copies), and no
+        over entries (layer placements + persistent disk copies), the
+        per-kind breakdown partitions each tier total exactly, and no
         counter ever goes negative."""
         for tier in TIER_ORDER:
-            expect = sum(e.bytes_per_layer for e in self.entries.values()
-                         for t in e.tier if t == tier)
-            if tier == DISK:
-                expect += sum(e.total_bytes for e in self.entries.values()
-                              if e.on_disk)
+            expect_kind: Dict[str, int] = {}
+            for e in self.entries.values():
+                n = sum(1 for t in e.tier if t == tier)
+                if tier == DISK and e.on_disk:
+                    n += e.n_layers
+                if n:
+                    expect_kind[e.kind] = expect_kind.get(e.kind, 0) \
+                        + n * e.bytes_per_layer
+            expect = sum(expect_kind.values())
             assert self.used[tier] >= 0, f"{tier}: negative accounting"
             assert self.used[tier] == expect, \
                 f"{tier}: used={self.used[tier]} expected={expect}"
+            assert self.used_kind[tier] == expect_kind, \
+                f"{tier}: per-kind {self.used_kind[tier]} != {expect_kind}"
 
     # -- queries -----------------------------------------------------------------
 

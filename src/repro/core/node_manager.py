@@ -31,7 +31,10 @@ class NodeManager:
         self.node_id = node_id
         self.cfg = cfg
         self.cost = cost
-        self.n_layers = cfg.n_layers
+        # store granularity: transformers tier KV layer-by-layer; recurrent
+        # (mamba2/xlstm) and hybrid sessions move as ONE fixed-size state
+        # blob, so their store entries carry a single "layer" unit
+        self.n_layers = getattr(cost, "store_layers", cfg.n_layers)
         self.store = TieredKVStore(
             hbm_budget=int(cost.hbm_kv_budget()),
             host_budget=int(host_budget or cost.hw.host_dram))
@@ -90,7 +93,8 @@ class NodeManager:
             peer.store.drop(sid)
             peer.fetches.pop(sid, None)
             self.store.admit(sid, pe.n_tokens, pe.bytes_per_layer,
-                             pe.n_layers, tier=HOST, priority=pe.priority)
+                             pe.n_layers, tier=HOST, priority=pe.priority,
+                             kind=pe.kind)
             # real mode: actually move the page contents between nodes
             if self.backend is not None and peer.backend is not None:
                 payload = peer.backend.export_session(sid)
@@ -205,7 +209,8 @@ class NodeManager:
             e.n_tokens = n_tokens
         else:
             e = self.store.admit(sid, n_tokens, int(bytes_per_layer),
-                                 self.n_layers, tier=HBM, priority=priority)
+                                 self.n_layers, tier=HBM, priority=priority,
+                                 kind=getattr(self.cost, "state_kind", "kv"))
         e.shared_tokens = shared_tokens
         self.fetches.pop(sid, None)
 
@@ -286,7 +291,7 @@ class NodeManager:
         dead.store.drop(sid)
         dead.fetches.pop(sid, None)
         self.store.admit(sid, e.n_tokens, e.bytes_per_layer, e.n_layers,
-                         tier=HOST, priority=e.priority)
+                         tier=HOST, priority=e.priority, kind=e.kind)
         self.fetches[sid] = FetchState(ready_at=ready)
         if payload is not None:
             self.backend.import_session(sid, payload)

@@ -24,15 +24,27 @@ class Policy:
     def place(self, sched, meta, advisory: bool) -> Optional[int]:
         raise NotImplementedError
 
-    def _least_loaded(self, sched) -> int:
-        return min(sched.live_nodes(), key=lambda n: n.load_key()).node_id
+    @staticmethod
+    def _candidates(sched, meta):
+        """Live nodes of the session's architecture group: a recurrent-state
+        session must never be placed on a node whose backend cannot hold its
+        state kind."""
+        nodes = sched.live_nodes(getattr(meta, "group", "default"))
+        if not nodes:
+            raise RuntimeError(
+                f"no live node serves group {getattr(meta, 'group', None)!r}")
+        return nodes
+
+    def _least_loaded(self, sched, meta) -> int:
+        return min(self._candidates(sched, meta),
+                   key=lambda n: n.load_key()).node_id
 
 
 class SymphonyPolicy(Policy):
     name = "symphony"
 
     def place(self, sched, meta, advisory: bool) -> int:
-        return self._least_loaded(sched)
+        return self._least_loaded(sched, meta)
 
 
 class StickyPolicy(Policy):
@@ -46,7 +58,7 @@ class StickyPolicy(Policy):
             return None
         if meta.kv_node is not None and sched.nodes[meta.kv_node].alive:
             return meta.kv_node
-        return min(sched.live_nodes(),
+        return min(self._candidates(sched, meta),
                    key=lambda n: (n.sessions, n.outstanding, n.node_id)).node_id
 
 
@@ -59,7 +71,7 @@ class StatelessPolicy(Policy):
     def place(self, sched, meta, advisory: bool) -> Optional[int]:
         if advisory:
             return None
-        return self._least_loaded(sched)
+        return self._least_loaded(sched, meta)
 
 
 class PriorityTierPolicy(SymphonyPolicy):
@@ -69,12 +81,12 @@ class PriorityTierPolicy(SymphonyPolicy):
     prefetch_to_hbm_priority_only = True
 
     def place(self, sched, meta, advisory: bool) -> int:
-        nodes = sched.live_nodes()
+        nodes = self._candidates(sched, meta)
         if meta.priority > 0:
             # spread high-priority sessions by count of high-pri sessions
             return min(nodes, key=lambda n: (
                 getattr(n, "hi_pri", 0), n.outstanding, n.node_id)).node_id
-        return self._least_loaded(sched)
+        return self._least_loaded(sched, meta)
 
 
 POLICIES = {p.name: p for p in

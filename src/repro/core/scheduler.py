@@ -29,6 +29,7 @@ class NodeStats:
     sessions: int = 0              # sessions whose KV lives here
     ewma_step: float = 0.0         # straggler signal (s per decode step)
     alive: bool = True
+    group: str = "default"         # architecture group this node serves
 
     def load_key(self):
         # an advisory reserves capacity on its target: simultaneous
@@ -38,8 +39,11 @@ class NodeStats:
 
 
 class SymphonyScheduler:
-    def __init__(self, n_nodes: int, policy: Policy):
-        self.nodes = {i: NodeStats(i) for i in range(n_nodes)}
+    def __init__(self, n_nodes: int, policy: Policy,
+                 node_groups: Optional[Dict[int, str]] = None):
+        groups = node_groups or {}
+        self.nodes = {i: NodeStats(i, group=groups.get(i, "default"))
+                      for i in range(n_nodes)}
         self.policy = policy
         self.sessions: Dict[str, SessionMeta] = {}
         self.planned: Dict[str, int] = {}      # session -> node chosen at advisory
@@ -54,6 +58,14 @@ class SymphonyScheduler:
         if sid not in self.sessions:
             self.sessions[sid] = SessionMeta(sid)
         return self.sessions[sid]
+
+    def bind_group(self, sid: str, group: str) -> SessionMeta:
+        """Bind a session to its architecture group (sticky once set off the
+        default — a later event that omits the group must not unbind it)."""
+        meta = self.session(sid)
+        if group != "default":
+            meta.group = group
+        return meta
 
     # -- planned-placement bookkeeping ---------------------------------------------
 
@@ -83,12 +95,17 @@ class SymphonyScheduler:
         ``prefix_node`` hint (a node whose resident pages already hold a
         shared prefix of this prompt — serving there skips that prefill
         entirely via copy-on-write sharing), then the placement policy."""
-        meta = self.session(req.session_id)
+        meta = self.bind_group(req.session_id, req.group)
+        req.group = meta.group
         req.priority = max(req.priority, meta.priority)
         target = self._unplan(req.session_id)
-        if target is None or not self.nodes[target].alive:
+        if target is None or not self.nodes[target].alive \
+                or self.nodes[target].group != meta.group:
+            # a plan from a group-less early advisory may point at the wrong
+            # architecture; the request's group is authoritative
             if prefix_node is not None and prefix_node in self.nodes \
-                    and self.nodes[prefix_node].alive:
+                    and self.nodes[prefix_node].alive \
+                    and self.nodes[prefix_node].group == meta.group:
                 target = prefix_node
             else:
                 target = self.policy.place(self, meta, advisory=False)
@@ -160,5 +177,6 @@ class SymphonyScheduler:
         st = self.nodes[node_id]
         st.ewma_step = 0.8 * st.ewma_step + 0.2 * dt if st.ewma_step else dt
 
-    def live_nodes(self) -> List[NodeStats]:
-        return [n for n in self.nodes.values() if n.alive]
+    def live_nodes(self, group: Optional[str] = None) -> List[NodeStats]:
+        return [n for n in self.nodes.values() if n.alive
+                and (group is None or n.group == group)]

@@ -14,7 +14,9 @@ def get_model(cfg: ModelConfig):
     if cfg.family == "encdec":
         from repro.models.encdec import EncDecLM
         return EncDecLM(cfg)
-    if cfg.family == "hybrid":
+    if cfg.family in ("hybrid", "mamba2"):
+        # one implementation, two families: "hybrid" interleaves the shared
+        # attention block, "mamba2" is the pure-SSM backbone (has_attn=False)
         from repro.models.mamba2 import Zamba2LM
         return Zamba2LM(cfg)
     if cfg.family == "xlstm":

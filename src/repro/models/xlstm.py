@@ -47,6 +47,12 @@ class XLSTMLM:
         self.n_groups = cfg.n_layers // self.group
         self.d_ffn_s = _round64(cfg.d_model * x.slstm_proj_factor)
         self.d_head_s = cfg.d_model // self.nh       # sLSTM head dim
+        # slot-pool serving entry point (StateBackend) — see mamba2.py
+        self.state_pool_names = ("m_C", "m_n", "m_m", "m_conv",
+                                 "s_c", "s_n", "s_h", "s_m")
+        self._slots_jit = None
+        self._slot_scatter_jit = None
+        self._compile_keys = dict(slots=set(), scatter=set())
 
     # -- params ---------------------------------------------------------------
 
@@ -113,18 +119,29 @@ class XLSTMLM:
 
     # -- mLSTM ------------------------------------------------------------------
 
-    def _mlstm_qkvif(self, x, w):
-        """x:(B,S,D) -> q,k,v,(log_i,log_f),z with conv on the x branch."""
+    def _mlstm_qkvif(self, x, w, conv_state=None, n_valid=None):
+        """x:(B,S,D) -> q,k,v,(log_i,log_f),z with conv on the x branch.
+        ``conv_state`` continues the causal-conv window across steps;
+        ``n_valid`` reads each lane's conv tail at its own valid boundary."""
         c = self.cfg
         B, S, _ = x.shape
         xn = L.rms_norm(x, w["ln"], c.norm_eps)
         up = xn @ w["w_up"]
         xm, z = jnp.split(up, 2, axis=-1)                  # (B,S,inner) each
         K = c.xlstm.conv_kernel
-        pad = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
-        win = jnp.stack([pad[:, i:i + S] for i in range(K)], -1)
+        if conv_state is None:
+            full = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+        else:
+            full = jnp.concatenate(
+                [conv_state.transpose(0, 2, 1).astype(xm.dtype), xm], 1)
+        win = jnp.stack([full[:, i:i + S] for i in range(K)], -1)
         xc = jax.nn.silu(jnp.einsum("bsdk,dk->bsd", win, w["conv_w"]))
-        conv_tail = pad[:, -(K - 1):].transpose(0, 2, 1)   # (B,inner,K-1)
+        if n_valid is None:
+            conv_tail = full[:, S:].transpose(0, 2, 1)     # (B,inner,K-1)
+        else:
+            idx = n_valid[:, None] + jnp.arange(K - 1)[None, :]
+            conv_tail = jnp.take_along_axis(
+                full, idx[:, :, None], axis=1).transpose(0, 2, 1)
         xh = xc.reshape(B, S, self.nh, self.d_v)
         q = jnp.einsum("bshv,hvq->bshq", xh, w["wq"])
         k = jnp.einsum("bshv,hvq->bshq", xh, w["wk"]) / np.sqrt(self.d_qk)
@@ -141,8 +158,18 @@ class XLSTMLM:
         B, S, NH, dqk = q.shape
         dv = v.shape[-1]
         Q = min(CHUNK, S)
-        assert S % Q == 0
-        nc = S // Q
+        pad = (-S) % Q
+        if pad:
+            # exact identity pads: k=v=0 kills the state contribution,
+            # log_f=0 leaves the cumulative decay (and csf[:, -1]) unchanged,
+            # log_i=-1e30 zeroes the input-gate weight post-exp
+            zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+            q, k, v = zp(q), zp(k), zp(v)
+            log_f = zp(log_f)
+            log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                            constant_values=-1e30)
+        Sp = S + pad
+        nc = Sp // Q
 
         def resh(t):
             return (t.reshape((B, nc, Q) + t.shape[2:])
@@ -188,7 +215,7 @@ class XLSTMLM:
             return (C, n, m_new), h
 
         (C, n, m), hc = jax.lax.scan(chunk, (C0, n0, m0), (qc, kc, vc, lic, lfc))
-        h = hc.transpose(1, 0, 2, 3, 4).reshape(B, S, NH, dv)
+        h = hc.transpose(1, 0, 2, 3, 4).reshape(B, Sp, NH, dv)[:, :S]
         return h, (C, n, m)
 
     def _mlstm_step(self, q, k, v, log_i, log_f, state):
@@ -205,11 +232,17 @@ class XLSTMLM:
                           jnp.exp(-m_new))
         return num / den[..., None], (C, n, m_new)
 
-    def _mlstm_block(self, x, w, state=None, conv_state=None):
+    def _mlstm_block(self, x, w, state=None, conv_state=None,
+                     seq_mask=None, n_valid=None):
         c = self.cfg
         B, S, D = x.shape
-        if conv_state is None:
-            q, k, v, li, lf, z, conv_tail = self._mlstm_qkvif(x, w)
+        if conv_state is None or S > 1 or seq_mask is not None:
+            q, k, v, li, lf, z, conv_tail = self._mlstm_qkvif(
+                x, w, conv_state, n_valid)
+            if seq_mask is not None:
+                msk = seq_mask[:, :, None]
+                lf = lf * msk                   # pad: decay exp(0)=1
+                li = jnp.where(msk > 0, li, -1e30)   # pad: zero input weight
             h, new_state = self._mlstm_chunked(q, k, v, li, lf, state)
         else:
             xn = L.rms_norm(x, w["ln"], c.norm_eps)
@@ -238,13 +271,17 @@ class XLSTMLM:
 
     # -- sLSTM ------------------------------------------------------------------
 
-    def _slstm_scan(self, gates_x, w, state):
-        """gates_x: (B,S,4,NH,ph) precomputed input gates; recurrent scan."""
+    def _slstm_scan(self, gates_x, w, state, seq_mask=None):
+        """gates_x: (B,S,4,NH,ph) precomputed input gates; recurrent scan.
+        ``seq_mask`` (B,S) freezes the carried state at padded steps."""
         B, S = gates_x.shape[0], gates_x.shape[1]
         ph = self.d_head_s
+        if seq_mask is None:
+            seq_mask = jnp.ones((B, S), jnp.float32)
 
-        def step(carry, gx):
+        def step(carry, inp):
             cst, nst, hst, mst = carry                     # (B,NH,ph)...
+            gx, mt = inp
             rec = jnp.einsum("bhp,hpq->bhq", hst, w["r_ifzo"]).astype(jnp.float32)
             rec = rec.reshape(B, self.nh, 4, ph).transpose(0, 2, 1, 3)
             g = gx.astype(jnp.float32) + rec               # (B,4,NH,ph)
@@ -253,15 +290,20 @@ class XLSTMLM:
             m_new = jnp.maximum(lf + mst, li)
             i_ = jnp.exp(li - m_new)
             f_ = jnp.exp(lf + mst - m_new)
-            cst = f_ * cst + i_ * jnp.tanh(z)
-            nst = f_ * nst + i_
-            hst = jax.nn.sigmoid(o) * cst / jnp.maximum(nst, 1e-6)
-            return (cst, nst, hst, m_new), hst
+            cst_n = f_ * cst + i_ * jnp.tanh(z)
+            nst_n = f_ * nst + i_
+            hst_n = jax.nn.sigmoid(o) * cst_n / jnp.maximum(nst_n, 1e-6)
+            keep = mt[:, None, None] > 0                   # (B,1,1)
+            out = (jnp.where(keep, cst_n, cst), jnp.where(keep, nst_n, nst),
+                   jnp.where(keep, hst_n, hst), jnp.where(keep, m_new, mst))
+            return out, hst_n
 
-        carry, hs = jax.lax.scan(step, state, gates_x.transpose(1, 0, 2, 3, 4))
+        carry, hs = jax.lax.scan(
+            step, state,
+            (gates_x.transpose(1, 0, 2, 3, 4), seq_mask.transpose(1, 0)))
         return hs.transpose(1, 0, 2, 3), carry             # (B,S,NH,ph)
 
-    def _slstm_block(self, x, w, state=None):
+    def _slstm_block(self, x, w, state=None, seq_mask=None):
         c = self.cfg
         B, S, D = x.shape
         ph = self.d_head_s
@@ -271,7 +313,7 @@ class XLSTMLM:
         if state is None:
             z = jnp.zeros((B, self.nh, ph), jnp.float32)
             state = (z, z, z, jnp.full((B, self.nh, ph), -1e30, jnp.float32))
-        hs, new_state = self._slstm_scan(gx, w, state)
+        hs, new_state = self._slstm_scan(gx, w, state, seq_mask)
         h = hs.reshape(B, S, D)
         h = L.rms_norm(h, w["gn"], c.norm_eps)
         x = x + (h @ w["w_out"]).astype(x.dtype)
@@ -288,43 +330,53 @@ class XLSTMLM:
         rs = lambda t: t.reshape((self.n_groups, c.xlstm.s_per_group) + t.shape[1:])
         return jax.tree.map(rm, params["mlstm"]), jax.tree.map(rs, params["slstm"])
 
-    def _run_groups(self, params, x, caches=None, decode=False):
-        """caches: dict or None. Returns (x, (mstates, sstates))."""
+    def _run_groups(self, params, x, caches=None, decode=False,
+                    seq_mask=None, n_valid=None):
+        """caches: dict or None. Returns (x, (mstates, sstates)).
+
+        Three modes: fresh (no caches: train/prefill, checkpointed),
+        decode (caches, S==1 recurrent step), and continuation (caches with
+        seq_mask/n_valid: chunked steps seeded from carried state — the
+        slot-pool serving path)."""
         gm, gs = self._stack_params(params)
 
         def group(x, inp):
-            if decode:
+            if caches is not None:
                 wm, ws, cm, cs = inp
             else:
                 wm, ws = inp
 
             def m_body(x, wst):
-                if decode:
+                if caches is not None:
                     w, st = wst
                     state, conv = (st[0], st[1], st[2]), st[3]
-                    x, (nstate, nconv) = self._mlstm_block(x, w, state, conv)
+                    x, (nstate, nconv) = self._mlstm_block(
+                        x, w, state, conv, seq_mask=seq_mask, n_valid=n_valid)
                 else:
                     w = wst
                     blk = jax.checkpoint(
                         lambda x, w: self._mlstm_block(hints.shard(x, "residual"), w))
                     x, (nstate, nconv) = blk(x, w)
                 return x, (*nstate, nconv)
-            x, mstates = jax.lax.scan(m_body, x, (wm, cm) if decode else wm)
+            x, mstates = jax.lax.scan(m_body, x,
+                                      (wm, cm) if caches is not None else wm)
 
             def s_body(x, wst):
-                if decode:
+                if caches is not None:
                     w, st = wst
-                    x, nst = self._slstm_block(x, w, tuple(st))
+                    x, nst = self._slstm_block(x, w, tuple(st),
+                                               seq_mask=seq_mask)
                 else:
                     w = wst
                     blk = jax.checkpoint(
                         lambda x, w: self._slstm_block(hints.shard(x, "residual"), w))
                     x, nst = blk(x, w)
                 return x, nst
-            x, sstates = jax.lax.scan(s_body, x, (ws, cs) if decode else ws)
+            x, sstates = jax.lax.scan(s_body, x,
+                                      (ws, cs) if caches is not None else ws)
             return x, (mstates, sstates)
 
-        if decode:
+        if caches is not None:
             cm = tuple(caches[k] for k in ("m_C", "m_n", "m_m", "m_conv"))
             cs = tuple(caches[k] for k in ("s_c", "s_n", "s_h", "s_m"))
             rm = lambda t: t.reshape((self.n_groups, self.cfg.xlstm.m_per_group)
@@ -401,6 +453,104 @@ class XLSTMLM:
             len=cache["len"] + 1,
         )
         return logits, new_cache
+
+    def grow_cache(self, cache: Dict, extra: int) -> Dict:
+        """xLSTM state is context-length independent — nothing to grow."""
+        return cache
+
+    # -- slot-pool serving (StateBackend) -----------------------------------------
+
+    def init_slot_pools(self, n_slots: int) -> Dict:
+        """Stacked per-layer state pools with ``n_slots + 1`` fixed slots
+        (slot ``n_slots`` is the trash slot for padded lanes)."""
+        c = self.cfg
+        nm = self.n_groups * c.xlstm.m_per_group
+        ns = self.n_groups * c.xlstm.s_per_group
+        P, ph, f32 = n_slots + 1, self.d_head_s, jnp.float32
+        return dict(
+            m_C=jnp.zeros((nm, P, self.nh, self.d_qk, self.d_v), f32),
+            m_n=jnp.zeros((nm, P, self.nh, self.d_qk), f32),
+            m_m=jnp.full((nm, P, self.nh), -1e30, f32),
+            m_conv=jnp.zeros((nm, P, self.d_inner,
+                              c.xlstm.conv_kernel - 1), self.dtype),
+            s_c=jnp.zeros((ns, P, self.nh, ph), f32),
+            s_n=jnp.zeros((ns, P, self.nh, ph), f32),
+            s_h=jnp.zeros((ns, P, self.nh, ph), f32),
+            s_m=jnp.full((ns, P, self.nh, ph), -1e30, f32),
+        )
+
+    def blank_state(self) -> Dict[str, np.ndarray]:
+        """Host-side fresh state for one session (resets a reused slot)."""
+        c = self.cfg
+        nm = self.n_groups * c.xlstm.m_per_group
+        ns = self.n_groups * c.xlstm.s_per_group
+        ph, f32 = self.d_head_s, np.float32
+        return dict(
+            m_C=np.zeros((nm, self.nh, self.d_qk, self.d_v), f32),
+            m_n=np.zeros((nm, self.nh, self.d_qk), f32),
+            m_m=np.full((nm, self.nh), -1e30, f32),
+            m_conv=np.zeros((nm, self.d_inner, c.xlstm.conv_kernel - 1),
+                            self.dtype),
+            s_c=np.zeros((ns, self.nh, ph), f32),
+            s_n=np.zeros((ns, self.nh, ph), f32),
+            s_h=np.zeros((ns, self.nh, ph), f32),
+            s_m=np.full((ns, self.nh, ph), -1e30, f32),
+        )
+
+    def _step_slots_impl(self, params, token_ids, pools, slot_idx, n_valid,
+                         last_idx, *, kernel_mode):
+        c = self.cfg
+        B, Sq = token_ids.shape
+        x = params["emb"][token_ids]
+        mask = (jnp.arange(Sq)[None, :] < n_valid[:, None]).astype(jnp.float32)
+        caches = {k: pools[k][:, slot_idx] for k in self.state_pool_names}
+        x, (mstates, sstates) = self._run_groups(
+            params, x, caches, decode=False, seq_mask=mask, n_valid=n_valid)
+        x = L.rms_norm(x, params["ln_f"], c.norm_eps)
+        sel = x[jnp.arange(B), last_idx]
+        logits = jnp.einsum("bd,vd->bv", sel, params["lm_head"])
+        toks = jnp.argmax(logits[:, :c.vocab], axis=-1).astype(jnp.int32)
+        mC, mn, mm, mconv = mstates
+        sc, sn, sh, sm = sstates
+        flat = lambda t: t.reshape((-1,) + t.shape[2:])
+        new = dict(m_C=flat(mC), m_n=flat(mn), m_m=flat(mm), m_conv=flat(mconv),
+                   s_c=flat(sc), s_n=flat(sn), s_h=flat(sh), s_m=flat(sm))
+        pools = {k: pools[k].at[:, slot_idx].set(
+            new[k].astype(pools[k].dtype)) for k in pools}
+        return toks, logits, pools
+
+    def step_slots(self, params, token_ids, pools, slot_idx, n_valid, last_idx,
+                   *, kernel_mode="auto"):
+        if self._slots_jit is None:
+            self._slots_jit = jax.jit(self._step_slots_impl,
+                                      static_argnames=("kernel_mode",),
+                                      donate_argnums=(2,))
+        args = (params, token_ids, pools, slot_idx, n_valid, last_idx)
+        self._compile_keys["slots"].add(self._shape_sig(args, kernel_mode))
+        return self._slots_jit(*args, kernel_mode=kernel_mode)
+
+    def _scatter_slots_impl(self, pools, slot_idx, payload):
+        return {k: pools[k].at[:, slot_idx].set(
+            payload[k].astype(pools[k].dtype)) for k in pools}
+
+    def scatter_slots(self, pools, slot_idx, payload):
+        """Write per-session state blobs into slots. slot_idx: (B,);
+        payload leaves: (n_layers_of_type, B, ...)."""
+        if self._slot_scatter_jit is None:
+            self._slot_scatter_jit = jax.jit(self._scatter_slots_impl,
+                                             donate_argnums=(0,))
+        self._compile_keys["scatter"].add(
+            self._shape_sig((pools, slot_idx, payload), None))
+        return self._slot_scatter_jit(pools, slot_idx, payload)
+
+    @staticmethod
+    def _shape_sig(args, kernel_mode):
+        return (kernel_mode,) + tuple(
+            (tuple(a.shape), str(a.dtype))
+            for a in jax.tree.leaves(args) if hasattr(a, "shape"))
+
+    def slot_compile_counts(self) -> Dict[str, int]:
+        return {k: len(v) for k, v in self._compile_keys.items()}
 
     def input_specs(self, cell: ShapeCell) -> Dict:
         B, S = cell.global_batch, cell.seq_len

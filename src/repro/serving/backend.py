@@ -1181,3 +1181,16 @@ class RealBackend(Backend):
         return dict(layers=layers, n_kv=n,
                     last_token=None if last < 0 else last, priority=prio,
                     ids=ids)
+
+
+def make_backend(cfg, model, params, **kw):
+    """Family-dispatching real-backend factory: recurrent (mamba2/xlstm)
+    and hybrid families serve through the slot-pool `StateBackend`
+    (serving/state_backend.py); transformer families through
+    `RealBackend`.  Both sit behind the same `Backend` protocol, so
+    engine/manager/cluster code never branches on state kind."""
+    if cfg.family in ("mamba2", "xlstm", "hybrid"):
+        from repro.serving.state_backend import StateBackend
+        return StateBackend(cfg, model, params, **kw)
+    kw.pop("n_slots", None)          # slot pools are a recurrent concept
+    return RealBackend(cfg, model, params, **kw)

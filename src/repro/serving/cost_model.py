@@ -38,16 +38,26 @@ class CostModel:
         c = cfg
         self.n_params = None    # lazy (needs model)
         dtype_bytes = 2
-        if c.family in ("hybrid",):
+        if c.family in ("hybrid", "mamba2"):
+            # mamba2 was previously missing here and fell through to the
+            # transformer branch — pure-SSM sessions were priced as linear
+            # KV (wildly wrong swap costs and HBM session budgets in sim).
+            # Both families carry the same per-mamba-layer fixed state
+            # (SSM heads f32 + conv tail in model dtype); only hybrid adds
+            # windowed KV for its shared attention applications.
             s = c.ssm
             d_inner = s.expand * c.d_model
             nh = d_inner // s.head_dim
             conv_dim = d_inner + 2 * s.n_groups * s.d_state
             self.fixed_state_bytes = c.n_layers * (
                 nh * s.d_state * s.head_dim * 4 + conv_dim * (s.d_conv - 1) * 2)
-            napps = c.n_layers // c.shared_every
-            self.kv_bytes_token = napps * 2 * c.kv_dim * dtype_bytes
-            self.kv_window = c.sliding_window or 1 << 30
+            if c.family == "hybrid":
+                napps = c.n_layers // c.shared_every
+                self.kv_bytes_token = napps * 2 * c.kv_dim * dtype_bytes
+                self.kv_window = c.sliding_window or 1 << 30
+            else:
+                self.kv_bytes_token = 0
+                self.kv_window = 0
         elif c.family == "xlstm":
             x = c.xlstm
             d_v = int(c.d_head * x.proj_factor)
@@ -64,6 +74,13 @@ class CostModel:
             self.fixed_state_bytes = 0
             self.kv_bytes_token = c.n_layers * 2 * c.kv_dim * dtype_bytes
             self.kv_window = 1 << 30
+        # session-state geometry for the tiered store: recurrent/hybrid
+        # state is O(1) per session and migrates ATOMICALLY (the paper's
+        # cheapest-migration case), so the store tracks it as ONE layer
+        # unit; transformers keep layer-granular placement
+        self.state_kind = ("state" if c.family in ("mamba2", "xlstm")
+                          else "hybrid" if c.family == "hybrid" else "kv")
+        self.store_layers = c.n_layers if self.state_kind == "kv" else 1
 
     # -- sizes --------------------------------------------------------------------
 

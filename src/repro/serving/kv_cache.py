@@ -39,6 +39,12 @@ class OutOfPages(RuntimeError):
     pass
 
 
+class OutOfSlots(OutOfPages):
+    """Fixed-slot pool exhausted.  Subclasses OutOfPages so the engine's
+    pressure path (reclaim leases -> cooperative purge -> preempt) applies
+    unchanged to recurrent-state allocation failures."""
+
+
 @dataclass
 class SeqAlloc:
     seq_id: str
@@ -294,3 +300,92 @@ class PagedAllocator:
         assert len(free) == len(self.free_list), "duplicate free page"
         assert held.isdisjoint(free), "freed-in-use page"
         assert len(held) + len(free) == self.n_pages, "leak"
+
+
+class StateAllocator:
+    """Fixed-size recurrent-state slot allocator (SSM conv+state, mLSTM
+    C/n/m, sLSTM c/n/h/m): the O(1)-per-session counterpart of
+    `PagedAllocator`, with the SAME lease discipline and conservation
+    `check()`.
+
+    A slot is one row of every stacked state pool — a session owns exactly
+    one slot while resident.  There is no refcounting or copy-on-write:
+    recurrent state is never prefix-shared (the whole point of O(1) state
+    is that it is 100% session-private).  `lease()` detaches a sequence
+    whose slot an in-flight device->host copy still reads, keeping the slot
+    out of the free list until `release()` — identical semantics to page
+    leases, so a crashed or preempted transfer can never hand a mid-copy
+    slot to another session."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.free_list: List[int] = list(range(n_slots - 1, -1, -1))
+        self.seqs: Dict[str, int] = {}           # sid -> slot
+        self.leased: Dict[int, int] = {}         # slot -> transfer holds
+        self.stats = dict(allocs=0, frees=0, peak_used=0, leases=0)
+
+    @property
+    def used_slots(self) -> int:
+        return self.n_slots - len(self.free_list)
+
+    def can_fit(self, seq_id: Optional[str] = None) -> bool:
+        return seq_id in self.seqs or bool(self.free_list)
+
+    def allocate(self, seq_id: str) -> int:
+        assert seq_id not in self.seqs
+        if not self.free_list:
+            raise OutOfSlots(f"{seq_id}: no free state slot "
+                             f"(all {self.n_slots} in use)")
+        slot = self.free_list.pop()
+        self.seqs[seq_id] = slot
+        self.stats["allocs"] += 1
+        self.stats["peak_used"] = max(self.stats["peak_used"],
+                                      self.used_slots)
+        return slot
+
+    def slot_of(self, seq_id: str) -> int:
+        return self.seqs[seq_id]
+
+    def free(self, seq_id: str) -> int:
+        """Detach a sequence; its slot returns to the free list unless an
+        in-flight transfer still leases it."""
+        slot = self.seqs.pop(seq_id, None)
+        if slot is None:
+            return 0
+        if not self.leased.get(slot):
+            self.free_list.append(slot)
+            self.stats["frees"] += 1
+        return 1
+
+    def lease(self, seq_id: str) -> Optional[int]:
+        """Detach a sequence whose slot an in-flight transfer still reads:
+        the slot stays out of the free list until `release()`."""
+        slot = self.seqs.pop(seq_id, None)
+        if slot is None:
+            return None
+        self.leased[slot] = self.leased.get(slot, 0) + 1
+        self.stats["leases"] += 1
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Return one transfer hold (copy landed/cancelled)."""
+        held = self.leased.get(slot, 0)
+        assert held > 0, f"releasing a non-leased slot {slot}"
+        if held > 1:
+            self.leased[slot] = held - 1
+            return
+        del self.leased[slot]
+        if slot not in self.seqs.values():
+            self.free_list.append(slot)
+            self.stats["frees"] += 1
+
+    def check(self) -> None:
+        owned = list(self.seqs.values())
+        assert len(set(owned)) == len(owned), "slot owned by two sequences"
+        for s, n in self.leased.items():
+            assert n > 0, f"slot {s}: zero lease entry"
+        held = set(owned) | set(self.leased)
+        free = set(self.free_list)
+        assert len(free) == len(self.free_list), "duplicate free slot"
+        assert held.isdisjoint(free), "freed-in-use slot"
+        assert len(held) + len(free) == self.n_slots, "slot leak"

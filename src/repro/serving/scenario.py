@@ -32,13 +32,16 @@ class MultiTurnRealTrace(Trace):
                  prompt_len: int = 10, gen: int = 8, seed: int = 1,
                  lead: float = 0.05,
                  fail_after_turn: Optional[int] = None,
-                 fail_session: str = "s0"):
+                 fail_session: str = "s0", group: str = "default",
+                 sid_prefix: str = "s"):
         rng = np.random.default_rng(seed)
         self.gen = gen
         self.lead = lead
+        self.group = group
         self.prompts: Dict[str, List[List[int]]] = {
-            f"s{i}": [list(map(int, rng.integers(0, cfg.vocab, prompt_len)))
-                      for _ in range(n_turns)]
+            f"{sid_prefix}{i}":
+                [list(map(int, rng.integers(0, cfg.vocab, prompt_len)))
+                 for _ in range(n_turns)]
             for i in range(n_sessions)}
         self.fail_after_turn = fail_after_turn
         self.fail_session = fail_session
@@ -51,7 +54,7 @@ class MultiTurnRealTrace(Trace):
             return InferenceRequest(
                 session_id=sid, prompt_tokens=len(turns[i]),
                 max_new_tokens=self.gen, prompt_ids=list(turns[i]),
-                arrival=t)
+                arrival=t, group=self.group)
 
         def cb(req: InferenceRequest, now: float):
             state["i"] += 1
@@ -66,13 +69,14 @@ class MultiTurnRealTrace(Trace):
                 ev.append((now + 1e-3, "fail", req.node_id))
             if i < len(turns):
                 ev.append((now + 0.5 * self.lead, "advisory",
-                           AdvisoryRequest(session_id=sid)))
+                           AdvisoryRequest(session_id=sid, group=self.group)))
                 ev.append((now + self.lead, "request",
                            make_req(i, now + self.lead)))
                 ev.append((now, "chain", (sid, cb)))
             return ev
 
-        return [(t0, "advisory", AdvisoryRequest(session_id=sid)),
+        return [(t0, "advisory",
+                 AdvisoryRequest(session_id=sid, group=self.group)),
                 (t0 + self.lead, "chain", (sid, cb)),
                 (t0 + self.lead, "request", make_req(0, t0 + self.lead))]
 
@@ -81,6 +85,21 @@ class MultiTurnRealTrace(Trace):
         evs = []
         for k, (sid, turns) in enumerate(self.prompts.items()):
             evs.extend(self._session_events(sid, turns, 0.01 * k))
+        return evs
+
+
+class MixedTrace(Trace):
+    """Interleave several traces into one event stream (the runtime's event
+    heap time-orders them): the mixed-architecture cluster workload, where
+    each sub-trace tags its sessions with its own node group."""
+
+    def __init__(self, *traces: Trace):
+        self.traces = traces
+
+    def events(self):
+        evs = []
+        for t in self.traces:
+            evs.extend(t.events())
         return evs
 
 

@@ -131,17 +131,41 @@ class ClusterRuntime:
                  page_size: int = 8, kernel_mode: str = "auto",
                  spool_root: Optional[str] = None,
                  trace_logits: bool = True, token_budget: int = 512,
-                 admit_lookahead: int = 4):
+                 admit_lookahead: int = 4,
+                 node_groups: Optional[Dict[str, dict]] = None):
         if mode not in ("sim", "real"):
             raise ValueError(f"unknown mode {mode!r} (sim|real)")
         self.cfg = cfg
         self.mode = mode
-        self.cost = CostModel(cfg, hw)
         self.policy: Policy = POLICIES[policy]
-        self.sched = SymphonyScheduler(n_nodes, self.policy)
+        # ---- node groups: one architecture (cfg/cost/model) per group ----
+        # The homogeneous call is the single-group special case; a mixed
+        # cluster passes node_groups={"default": {...}, "mamba2": {...}} and
+        # requests carry .group so routing never crosses architectures.
+        if node_groups is None:
+            node_groups = {"default": dict(cfg=cfg, n_nodes=n_nodes,
+                                           model=model, params=params)}
+        self.cfgs: Dict[int, ModelConfig] = {}
+        self.costs: Dict[int, CostModel] = {}
+        self.node_group: Dict[int, str] = {}
+        group_mp: Dict[str, tuple] = {}
+        nid = 0
+        for gname, spec in node_groups.items():
+            gcfg = spec["cfg"]
+            gcost = CostModel(gcfg, spec.get("hw", hw))
+            group_mp[gname] = (spec.get("model"), spec.get("params"))
+            for _ in range(spec.get("n_nodes", 1)):
+                self.cfgs[nid] = gcfg
+                self.costs[nid] = gcost
+                self.node_group[nid] = gname
+                nid += 1
+        n_nodes = nid
+        self.cost = self.costs[0]      # homogeneous-call compatibility
+        self.sched = SymphonyScheduler(n_nodes, self.policy,
+                                       node_groups=self.node_group)
         pod_of = lambda n: n // nodes_per_pod
         self.managers: Dict[int, NodeManager] = {
-            i: NodeManager(i, cfg, self.cost, pod_of=pod_of)
+            i: NodeManager(i, self.cfgs[i], self.costs[i], pod_of=pod_of)
             for i in range(n_nodes)}
         for i, m in self.managers.items():
             m.register_peers(self.managers)
@@ -151,17 +175,21 @@ class ClusterRuntime:
         self.spool_root: Optional[Path] = None
         self._own_spool = False
         if mode == "real":
-            if model is None or params is None:
-                raise ValueError("mode='real' requires model= and params=")
-            from repro.serving.backend import RealBackend
-            if self.cost.n_params is None:
-                self.cost.set_param_count(model.param_count())
+            from repro.serving.backend import make_backend
+            for gname, (gmodel, gparams) in group_mp.items():
+                if gmodel is None or gparams is None:
+                    raise ValueError(
+                        f"mode='real' requires model= and params= "
+                        f"(group {gname!r})")
             self.spool_root = Path(spool_root) if spool_root is not None \
                 else Path(tempfile.mkdtemp(prefix="symphony_cluster_"))
             self._own_spool = spool_root is None
             for i in range(n_nodes):
-                self.backends[i] = RealBackend(
-                    cfg, model, params, n_pages=n_pages,
+                gmodel, gparams = group_mp[self.node_group[i]]
+                if self.costs[i].n_params is None:
+                    self.costs[i].set_param_count(gmodel.param_count())
+                self.backends[i] = make_backend(
+                    self.cfgs[i], gmodel, gparams, n_pages=n_pages,
                     page_size=page_size, kernel_mode=kernel_mode,
                     mgr=self.managers[i], trace_logits=trace_logits,
                     spool_dir=str(self.spool_root / f"node{i}"))
@@ -174,7 +202,8 @@ class ClusterRuntime:
             # mid-step, which the engine cannot do (stateless still
             # recomputes every *turn* via policy_reuses_kv=False)
             self.engines[i] = NodeEngine(
-                i, cfg, self.cost, self.managers[i], max_batch=max_batch,
+                i, self.cfgs[i], self.costs[i], self.managers[i],
+                max_batch=max_batch,
                 policy_reuses_kv=self.policy.reuses_kv,
                 swap_on_preempt=(self.policy.name != "stateless"
                                  or mode == "real"),
@@ -319,7 +348,7 @@ class ClusterRuntime:
         if not self.policy.uses_advisory:
             return
         sid = adv.session_id
-        meta = self.sched.session(sid)
+        meta = self.sched.bind_group(sid, adv.group)
         to_hbm = self.advisory_to_hbm and (
             not self.policy.prefetch_to_hbm_priority_only
             or (adv.priority or 0) > 0)
@@ -348,7 +377,8 @@ class ClusterRuntime:
             return None
         best, best_m = None, 0
         for i, be in self.backends.items():
-            if not self.sched.nodes[i].alive:
+            if not self.sched.nodes[i].alive \
+                    or self.node_group[i] != req.group:
                 continue
             m = be.prefix_match_tokens(req.prompt_ids)
             if m > best_m:
@@ -432,9 +462,12 @@ class ClusterRuntime:
         self.sched.on_request_complete(req, total)
         if self.policy.reuses_kv:
             if self.mode == "sim":
+                # per-node cost/granularity: a recurrent node's store holds
+                # ONE whole-blob layer, a transformer's one per model layer
+                cost, cfg = self.costs[i], self.cfgs[i]
+                layers = getattr(cost, "store_layers", cfg.n_layers)
                 self.managers[i].mark_resident(
-                    sid, total,
-                    self.cost.session_kv_bytes(total) / self.cfg.n_layers,
+                    sid, total, cost.session_kv_bytes(total) / layers,
                     req.priority)
             if self.policy.uses_advisory:
                 # background disk write-through: the always-one-copy-on-disk

@@ -1,15 +1,17 @@
-"""Hypothesis op-sequence state machines over the two bookkeeping layers the
-RealBackend trusts: `PagedAllocator` (physical pages) and `TieredKVStore`
-(tier placement bytes).  Every generated op sequence must keep the class
-invariants (`check()`) true after EVERY op — these are the ledgers that real
-page copies follow, so a bookkeeping drift here is silent KV corruption
+"""Hypothesis op-sequence state machines over the bookkeeping layers the
+real backends trust: `PagedAllocator` (physical pages), `StateAllocator`
+(fixed recurrent-state slots) and `TieredKVStore` (tier placement bytes).
+Every generated op sequence must keep the class invariants (`check()`) true
+after EVERY op — these are the ledgers that real page/slot copies follow,
+so a bookkeeping drift here is silent KV (or recurrent-state) corruption
 there."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.memory import DISK, HBM, HOST, TieredKVStore
-from repro.serving.kv_cache import OutOfPages, PagedAllocator
+from repro.serving.kv_cache import (OutOfPages, OutOfSlots, PagedAllocator,
+                                    StateAllocator)
 
 # ---------------------------------------------------------------------------
 # PagedAllocator: alloc / extend / truncate / free
@@ -121,6 +123,87 @@ def test_allocator_block_table_addresses_every_token(n_pages, page, toks):
     assert (pages >= 0).all() and (pages < n_pages).all()
     flat = pages * page + pos % page
     assert len(set(flat.tolist())) == toks
+
+
+# ---------------------------------------------------------------------------
+# StateAllocator: alloc / free / lease / release / crash
+# ---------------------------------------------------------------------------
+
+SLOT_OP = st.tuples(
+    st.sampled_from(["alloc", "free", "lease", "release", "crash"]),
+    st.integers(0, 7),           # session index / lease-pick argument
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(SLOT_OP, min_size=1, max_size=80))
+def test_state_allocator_state_machine(ops):
+    """Same conservation discipline as the page allocator, on whole slots:
+    a slot is always exactly one of {owned by one sequence, leased by an
+    in-flight transfer, free} — and a crash (every pending transfer
+    poisoned, releasing its lease) must return leased slots without ever
+    double-freeing or handing a mid-copy slot to a new session."""
+    a = StateAllocator(n_slots=4)
+    model = set()                                 # resident sids
+    leases = []                                   # in-flight transfer slots
+    for op, sid_i in ops:
+        sid = f"s{sid_i}"
+        try:
+            if op == "alloc" and sid not in a.seqs:
+                slot = a.allocate(sid)
+                assert 0 <= slot < a.n_slots
+                assert slot not in leases         # never a mid-copy slot
+                model.add(sid)
+            elif op == "free":
+                a.free(sid)
+                model.discard(sid)
+            elif op == "lease" and sid in a.seqs:
+                # async swap-out launch: sequence gone, slot held
+                slot = a.lease(sid)
+                assert slot is not None
+                leases.append(slot)
+                model.discard(sid)
+            elif op == "release" and leases:
+                # transfer completion: the leased slot comes home
+                a.release(leases.pop(sid_i % len(leases)))
+            elif op == "crash":
+                # poison path: every in-flight transfer cancels, releasing
+                # its hold (backend.crash drains the engine this way before
+                # rebuilding pools)
+                while leases:
+                    a.release(leases.pop())
+        except OutOfSlots:
+            pass                                  # failed op mutated nothing
+        a.check()
+        assert set(a.seqs) == model
+        # physical conservation: the non-free slots are exactly the union
+        # of every holder's view (owners + outstanding leases)
+        assert a.used_slots == len(set(a.seqs.values()) | set(a.leased))
+        assert a.used_slots + len(a.free_list) == a.n_slots
+        assert a.stats["peak_used"] <= a.n_slots
+        assert a.can_fit(sid) == (sid in a.seqs or bool(a.free_list))
+    # drain everything: all slots must come home exactly once
+    while leases:
+        a.release(leases.pop())
+    for sid in list(a.seqs):
+        a.free(sid)
+    a.check()
+    assert a.used_slots == 0 and sorted(a.free_list) == list(range(4))
+
+
+def test_state_allocator_lease_free_release_interleave():
+    """free() on a leased sequence must not return the slot early; the
+    release is what frees it — and reallocation in between keeps the slot
+    out of circulation."""
+    a = StateAllocator(n_slots=1)
+    a.allocate("s0")
+    slot = a.lease("s0")
+    assert slot == 0 and a.free_list == []
+    with pytest.raises(OutOfSlots):
+        a.allocate("s1")                 # mid-copy slot never handed out
+    a.release(slot)
+    assert a.allocate("s1") == 0         # now it circulates again
+    a.check()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,242 @@
+"""StateBackend numerical-parity harness: recurrent/hybrid session serving.
+
+The same multi-turn greedy conversation is served two ways:
+
+* dense reference — full-recompute `model.prefill`/`model.decode_step`
+  (the repo's correctness oracle lineage);
+* StateBackend through the NodeEngine — fixed-slot state pools (plus paged
+  KV for the hybrid family), masked-exact chunked scans over bucketed mixed
+  batches, and real swap/evict/promote/persist blob copies between tiers.
+
+Token ids must match exactly and per-token logits within tolerance, across
+≥3 turns including a preemption swap-out/swap-in round trip, whole-blob
+eviction/promotion, disk-spool resume after losing the host tier, and a
+node crash recovered from the spool — so any disagreement between the slot
+allocator, the tiered store, and the scan math shows up as a failed assert
+rather than silent state corruption.
+
+Families under test: mamba2 (pure SSM), xlstm (mLSTM+sLSTM), hybrid
+(zamba2: SSM backbone + shared windowed attention — both state kinds in
+one session).  The hybrid dense reference uses sliding-window attention
+while the backend serves full-causal paged attention; contexts here stay
+below the reduced window (128), where the two are identical.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.advisory import InferenceRequest
+from repro.core.node_manager import NodeManager
+from repro.models.registry import get_model
+from repro.serving.backend import make_backend
+from repro.serving.cost_model import CostModel, HardwareSpec
+from repro.serving.engine import NodeEngine
+from repro.serving.state_backend import StateBackend
+
+GEN = 6
+TOL = dict(rtol=2e-3, atol=2e-3)
+FAMILIES = {"mamba2": "mamba2-2.7b", "xlstm": "xlstm-1.3b",
+            "hybrid": "zamba2-2.7b"}
+
+
+def _setup(family: str, seed: int = 0, **backend_kw):
+    cfg = get_config(FAMILIES[family]).reduced(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(seed))
+    cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+    cost.set_param_count(model.param_count())
+    mgr = NodeManager(0, cfg, cost)
+    be = make_backend(cfg, model, params, mgr=mgr,
+                      **{**dict(n_slots=4, n_pages=32, page_size=8),
+                         **backend_kw})
+    assert isinstance(be, StateBackend)
+    eng = NodeEngine(0, cfg, cost, mgr, max_batch=4, backend=be)
+    return cfg, model, params, mgr, be, eng
+
+
+def _turns(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(0, cfg.vocab, n))) for n in lens]
+
+
+def _dense_reference(cfg, model, params, turns, gen=GEN):
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    history, out, logit_trail = [], [], []
+    for t in turns:
+        history = history + list(t)
+        logits, cache = prefill(params, jnp.asarray([history], jnp.int32))
+        cache = model.grow_cache(cache, gen)
+        outs = []
+        for _ in range(gen):
+            lg = logits[0, :cfg.vocab]
+            logit_trail.append(np.asarray(lg))
+            nxt = jnp.argmax(lg)[None].astype(jnp.int32)
+            outs.append(int(nxt[0]))
+            logits, cache = decode(params, cache, nxt)
+        out.append(outs)
+        history = history + outs
+    return out, logit_trail
+
+
+def _check(be, mgr):
+    """Allocator/store conservation invariants at a drain point."""
+    be.slots.check()
+    for a in be.kv_alloc:
+        a.check()
+    mgr.store.check()
+
+
+def _serve(eng, be, mgr, turns, gen=GEN, preempt_turn=None, sid="s0"):
+    outs, cached, now = [], 0, 0.0
+    for i, t in enumerate(turns):
+        req = InferenceRequest(session_id=sid, prompt_tokens=len(t),
+                               max_new_tokens=gen, prompt_ids=list(t),
+                               cached_tokens=cached)
+        eng.submit(req)
+        preempted = False
+        while eng.waiting or eng.running:
+            now += eng.step(now)
+            if (i == preempt_turn and not preempted and eng.running
+                    and req.generated >= gen // 2):
+                eng.preempt_one(now)          # swap-out -> resume round trip
+                preempted = True
+        outs.append(req.output_ids)
+        cached = be.session_tokens(sid)
+        be.drain_transfers()
+        _check(be, mgr)
+    return outs
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_multiturn_parity_with_preemption(family):
+    cfg, model, params, mgr, be, eng = _setup(family)
+    turns = _turns(cfg, (11, 7, 9))
+    want, want_logits = _dense_reference(cfg, model, params, turns)
+    got = _serve(eng, be, mgr, turns, preempt_turn=1)
+    assert got == want, f"token divergence ({family}): {got} vs {want}"
+    assert be.stats["swaps_out"] >= 1 and be.stats["swaps_in"] >= 1
+    trace = [lg for _sid, lg in be.logit_trace]
+    assert len(trace) == len(want_logits)
+    for got_lg, want_lg in zip(trace, want_logits):
+        np.testing.assert_allclose(got_lg, want_lg, **TOL)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_evict_then_promote_preserves_state(family):
+    """Whole-blob eviction (cooperative purge of the one store 'layer')
+    followed by advisory promotion must physically round-trip the state."""
+    cfg, model, params, mgr, be, eng = _setup(family, seed=2)
+    turns = _turns(cfg, (10, 8), seed=3)
+    want, _ = _dense_reference(cfg, model, params, turns)
+    got = [_serve(eng, be, mgr, turns[:1])[0]]
+    mgr.on_memory_pressure(be.hbm_kv_budget() * 10, now=1.0)
+    assert be.stats["layer_evictions"] == 1      # ONE blob, one eviction
+    assert "s0" not in be.slots.seqs             # slot really freed
+    _check(be, mgr)
+    mgr.promote("s0", now=2.0)
+    assert be.stats["layer_promotions"] == 1
+    assert "s0" in be.slots.seqs
+    req = InferenceRequest(session_id="s0", prompt_tokens=len(turns[1]),
+                           max_new_tokens=GEN, prompt_ids=list(turns[1]),
+                           cached_tokens=be.session_tokens("s0"))
+    eng.submit(req)
+    now = 3.0
+    while eng.waiting or eng.running:
+        now += eng.step(now)
+    got.append(req.output_ids)
+    assert got == want
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_disk_spool_recovers_lost_host_tier(family, tmp_path):
+    cfg, model, params, mgr, be, eng = _setup(family, seed=4,
+                                              spool_dir=str(tmp_path))
+    turns = _turns(cfg, (12, 6), seed=5)
+    want, _ = _dense_reference(cfg, model, params, turns)
+    got = [_serve(eng, be, mgr, turns[:1])[0]]
+    assert be.persist("s0")
+    be.drain_transfers()
+    assert (tmp_path / "s0.npz").exists()
+    be.swap_out("s0", be.session_tokens("s0"))
+    be.drain_transfers()
+    _check(be, mgr)
+    be.host.clear()                           # lose the fast tiers
+    got.append(_serve(eng, be, mgr, turns[1:])[0])
+    assert got == want
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_crash_recovers_from_spool(family, tmp_path):
+    """Node crash mid-conversation: pools, allocators and host tier die;
+    the persisted spool blob resumes the session token-exactly."""
+    cfg, model, params, mgr, be, eng = _setup(family, seed=6,
+                                              spool_dir=str(tmp_path))
+    turns = _turns(cfg, (9, 7), seed=7)
+    want, _ = _dense_reference(cfg, model, params, turns)
+    got = [_serve(eng, be, mgr, turns[:1])[0]]
+    assert be.persist("s0")
+    be.drain_transfers()
+    tokens_before = be.session_tokens("s0")
+    be.crash()
+    mgr.crash(now=10.0)
+    assert be.spool_exists("s0")
+    payload = be.recover_session("s0")
+    assert payload is not None
+    assert payload["n_kv"] + (payload["last_token"] is not None) \
+        == tokens_before
+    be.import_session("s0", payload)
+    mgr.mark_resident("s0", tokens_before,
+                      be.session_kv_bytes(tokens_before), priority=0)
+    got.append(_serve(eng, be, mgr, turns[1:])[0])
+    assert got == want
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_batched_decode_two_sessions(family):
+    """Batched slot decode over sessions of different lengths matches each
+    session's independent dense reference."""
+    cfg, model, params, mgr, be, eng = _setup(family, seed=1)
+    prompts = {"a": _turns(cfg, (9,), seed=7)[0],
+               "b": _turns(cfg, (13,), seed=8)[0]}
+    want = {s: _dense_reference(cfg, model, params, [p])[0][0]
+            for s, p in prompts.items()}
+    reqs = {}
+    for s, p in prompts.items():
+        reqs[s] = InferenceRequest(session_id=s, prompt_tokens=len(p),
+                                   max_new_tokens=GEN, prompt_ids=list(p))
+        eng.submit(reqs[s])
+    now = 0.0
+    while eng.waiting or eng.running:
+        now += eng.step(now)
+    assert len(eng.running) == 0 and len(eng.completed) == 2
+    _check(be, mgr)
+    for s in prompts:
+        assert reqs[s].output_ids == want[s], s
+
+
+def test_slot_exhaustion_preempts_not_corrupts():
+    """More concurrent sessions than slots: the engine's pressure path
+    (reclaim leases -> cooperative purge -> preempt) must keep every
+    session's output identical to its solo reference."""
+    cfg, model, params, mgr, be, eng = _setup("mamba2", seed=9, n_slots=2)
+    eng.max_batch = 2
+    prompts = {f"s{i}": _turns(cfg, (7 + i,), seed=20 + i)[0]
+               for i in range(4)}
+    want = {s: _dense_reference(cfg, model, params, [p])[0][0]
+            for s, p in prompts.items()}
+    reqs = {}
+    now = 0.0
+    for s, p in prompts.items():
+        reqs[s] = InferenceRequest(session_id=s, prompt_tokens=len(p),
+                                   max_new_tokens=GEN, prompt_ids=list(p))
+        eng.submit(reqs[s])
+    while eng.waiting or eng.running:
+        now += eng.step(now)
+    be.drain_transfers()
+    _check(be, mgr)
+    for s in prompts:
+        assert reqs[s].output_ids == want[s], s

@@ -1,11 +1,16 @@
 """Per-architecture smoke tests: reduced same-family config, one forward /
-train-loss / prefill+decode step on CPU, asserting shapes and no NaNs."""
+train-loss / prefill+decode step on CPU, asserting shapes and no NaNs —
+plus registry/config drift checks: every config in ``src/repro/configs``
+must resolve through ``get_model`` to a constructible model whose analytic
+``param_count`` agrees with the parameters ``init`` actually allocates."""
+import re
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS
+from repro.configs import ARCHS, get_config
 from repro.models.registry import get_model
 
 
@@ -27,6 +32,41 @@ def _batch_for(model, cfg, B=2, S=32):
 @pytest.fixture(scope="module")
 def smoke(request):
     return {}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_registry_resolves_config(arch):
+    """Every registered config resolves to a model at FULL size whose
+    analytic ``param_count`` matches the scale its name advertises — the
+    registry-drift failure mode where a renamed family/field silently
+    builds the wrong architecture (or a wrongly-sized one)."""
+    cfg = get_config(arch)
+    assert cfg is ARCHS[arch]
+    model = get_model(cfg)
+    n = model.param_count()
+    n_active = model.active_param_count()
+    assert 0 < n_active <= n
+    m = re.search(r"(\d+(?:\.\d+)?)b(?:-|$)", arch)
+    if m:                     # "-8b" style headline size in the name
+        advertised = float(m.group(1)) * 1e9
+        assert 0.5 * advertised <= n <= 1.6 * advertised, (arch, n)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_count_matches_init(arch):
+    """Reduced config: ``init`` constructs, every leaf is finite, and the
+    analytic count agrees with what was actually allocated (small padding
+    slack only — MoE expert padding, odd head splits)."""
+    cfg = ARCHS[arch].reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    leaves = jax.tree.leaves(params)
+    assert leaves, arch
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in leaves), arch
+    real = sum(l.size for l in leaves)
+    analytic = model.param_count()
+    assert abs(analytic - real) <= 0.01 * real, (arch, analytic, real)
 
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
