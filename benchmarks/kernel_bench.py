@@ -151,8 +151,113 @@ def bench_step(decode_steps: int = 16):
     payload["compile_counts"] = model.paged_compile_counts()
     payload["interference"] = bench_interference()
     payload["overlap"] = bench_overlap()
+    payload["mesh"] = _bench_mesh_subprocess()
     save("BENCH_step", payload)
     return payload
+
+
+def bench_mesh(tp: int = 2, decode_steps: int = 16):
+    """Tensor-parallel serving-step mode: the sharded-node observables.
+
+    Serves the same steady-state conversation twice through one shared
+    model — unsharded, then on a ``("model",)`` mesh of ``tp`` devices —
+    and reports per-device pool bytes (must be ~1/tp of the single-device
+    pool), steady-state decode latency for both, and the mesh-keyed
+    compile census.  Each mesh placement is warmed by an identical pass
+    first, so the measured pass must stay at ZERO compiles (the CI gate).
+    Requires ``tp`` visible devices — on CPU run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (``bench_step``
+    spawns this mode in a subprocess with that env so the single-device
+    numbers in the same artifact stay pristine)."""
+    from repro.configs import get_config
+    from repro.core.advisory import InferenceRequest
+    from repro.core.node_manager import NodeManager
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.registry import get_model
+    from repro.serving.backend import RealBackend
+    from repro.serving.cost_model import CostModel, HardwareSpec
+    from repro.serving.engine import NodeEngine
+
+    cfg = get_config("llama3-8b").reduced(dtype="float32", n_kv_heads=4)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def serve(mesh, measure):
+        rng = np.random.default_rng(0)
+        cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+        cost.set_param_count(model.param_count())
+        mgr = NodeManager(0, cfg, cost)
+        be = RealBackend(cfg, model, params, n_pages=64, page_size=8,
+                         mgr=mgr, trace_logits=False, mesh=mesh)
+        eng = NodeEngine(0, cfg, cost, mgr, max_batch=8, backend=be)
+        for i in range(2):
+            prompt = list(map(int, rng.integers(0, cfg.vocab, 12)))
+            eng.submit(InferenceRequest(
+                session_id=f"s{i}", prompt_tokens=12,
+                max_new_tokens=decode_steps + 1, prompt_ids=prompt))
+        now, steps, compiles = 0.0, [], 0
+        while eng.waiting or eng.running:
+            s0 = time.perf_counter()
+            census = be.compile_counts()
+            now += eng.step(now)
+            steps.append(time.perf_counter() - s0)
+            compiles += be.compile_counts() != census
+        if not measure:
+            return dict(warm_compiles=compiles), be
+        dsteps = np.asarray(steps[1:])
+        return dict(decode_ms_mean=float(dsteps.mean() * 1e3),
+                    decode_ms_median=float(np.median(dsteps) * 1e3),
+                    measured_compiles=compiles), be
+
+    out = dict(tp=tp, devices=jax.device_count())
+    serve(None, measure=False)                       # warm single-device
+    single, be1 = serve(None, measure=True)
+    out["single_device"] = dict(**single,
+                                pool_device_bytes=be1.pool_device_bytes())
+    mesh = make_serving_mesh(tp=tp)
+    warm, be_w = serve(mesh, measure=False)          # warm this placement
+    meshed, be_m = serve(mesh, measure=True)
+    out["meshed"] = dict(**meshed,
+                         pool_device_bytes=be_m.pool_device_bytes(),
+                         pool_spec=str(be_m._pool_sharding.spec),
+                         warm_compiles=warm["warm_compiles"])
+    out["pool_bytes_ratio"] = (out["meshed"]["pool_device_bytes"]
+                               / out["single_device"]["pool_device_bytes"])
+    out["compile_counts"] = model.paged_compile_counts()
+    emit(f"mesh.tp{tp}.decode_ms", out["meshed"]["decode_ms_mean"],
+         f"single={out['single_device']['decode_ms_mean']:.2f}ms "
+         f"pool_ratio={out['pool_bytes_ratio']:.3f} "
+         f"measured_compiles={out['meshed']['measured_compiles']}")
+    save("BENCH_mesh", out)
+    return out
+
+
+def _bench_mesh_subprocess(tp: int = 2):
+    """Run ``--mesh-only`` in a child whose XLA_FLAGS append the forced
+    host-device count (this process already initialized jax with however
+    many devices it has, so it cannot grow a mesh in place).  Returns the
+    child's BENCH_mesh payload, or an {error} stub off-CI (never fails the
+    single-device artifact)."""
+    import json
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    from benchmarks.common import RESULTS
+
+    env = dict(os.environ)
+    flag = "--xla_force_host_platform_device_count"
+    if flag not in env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = f"{env.get('XLA_FLAGS', '')} {flag}=4".strip()
+    root = Path(__file__).resolve().parents[1]
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.kernel_bench", "--mesh-only",
+         "--tp", str(tp)],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1200)
+    if r.returncode != 0:
+        return dict(error=(r.stderr or "")[-2000:])
+    return json.loads((RESULTS / "BENCH_mesh.json").read_text())
 
 
 def bench_overlap(ctx_len: int = 1536, lead_steps: int = 4,
@@ -697,6 +802,12 @@ if __name__ == "__main__":
                     help="run just the recurrent-state mode: O(1) slot-blob "
                          "swap vs linear paged-KV swap + sessions/node "
                          "headroom (emits the BENCH_recurrent.json artifact)")
+    ap.add_argument("--mesh-only", action="store_true",
+                    help="run just the tensor-parallel serving mode (emits "
+                         "the BENCH_mesh.json artifact; needs --tp visible "
+                         "devices — force host devices via XLA_FLAGS on CPU)")
+    ap.add_argument("--tp", type=int, default=2,
+                    help="mesh size for --mesh-only")
     ap.add_argument("--prompt-len", type=int, default=4000)
     ap.add_argument("--token-budget", type=int, default=4)
     ap.add_argument("--sessions", type=int, default=1000)
@@ -714,6 +825,9 @@ if __name__ == "__main__":
     elif args.recurrent_only:
         import json
         print(json.dumps(bench_recurrent(), indent=1))
+    elif args.mesh_only:
+        import json
+        print(json.dumps(bench_mesh(tp=args.tp), indent=1))
     elif args.step:
         bench_step()
     else:

@@ -23,6 +23,28 @@ import sys
 import time
 
 
+def _mesh_summary(mesh):
+    """Tensor-parallel serving section of the scorecard (None when the
+    step artifact predates the mesh mode or its subprocess errored)."""
+    if not mesh:
+        return None
+    if "error" in mesh:
+        return dict(error=mesh["error"])
+    return dict(
+        tp=mesh.get("tp"),
+        pool_spec=mesh.get("meshed", {}).get("pool_spec"),
+        pool_bytes_ratio=mesh.get("pool_bytes_ratio"),
+        pool_device_bytes=mesh.get("meshed", {}).get("pool_device_bytes"),
+        pool_device_bytes_tp1=mesh.get("single_device",
+                                       {}).get("pool_device_bytes"),
+        decode_ms_mean=mesh.get("meshed", {}).get("decode_ms_mean"),
+        decode_ms_mean_tp1=mesh.get("single_device",
+                                    {}).get("decode_ms_mean"),
+        measured_compiles=mesh.get("meshed", {}).get("measured_compiles"),
+        compile_counts=mesh.get("compile_counts"),
+    )
+
+
 def aggregate_serving() -> dict:
     """Fold BENCH_step.json + BENCH_cluster.json into BENCH_serving.json.
     Both inputs must already exist (CI's earlier steps emit them)."""
@@ -99,6 +121,7 @@ def aggregate_serving() -> dict:
             cow_forks=sharing.get("cow_forks"),
             parity_ok=sharing.get("parity_ok"),
         ),
+        mesh=_mesh_summary(step.get("mesh")),
         recurrent=None if recurrent is None else dict(
             ctx_len=recurrent.get("ctx_len"),
             stall_cold_kv_ms=recurrent.get("kv", {}).get("stall_cold_ms"),

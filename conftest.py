@@ -8,7 +8,12 @@ checkout with only requirements-dev.txt installed:
 2. if the real ``hypothesis`` package is unavailable (minimal containers),
    register the API-compatible stub from ``tests/_hypothesis_stub.py`` so
    the property tests still collect and run (on a fixed-seed sample of
-   examples instead of hypothesis' guided search).
+   examples instead of hypothesis' guided search);
+3. force 8 virtual host devices (appending to any user XLA_FLAGS, before
+   anything imports jax) so the tensor-parallel serving tests
+   (tests/test_sharded_serving.py, tp up to 4) run in the default tier-1
+   suite on CPU.  Single-device tests are unaffected: un-sharded jits
+   place everything on device 0 as before.
 """
 import sys
 from pathlib import Path
@@ -17,6 +22,10 @@ _ROOT = Path(__file__).resolve().parent
 _SRC = str(_ROOT / "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+from repro.launch.mesh import force_host_device_count  # noqa: E402
+
+force_host_device_count(8)
 
 try:
     import hypothesis  # noqa: F401

@@ -48,13 +48,22 @@ class ShardingPlan:
     def _ns(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
 
-    def _div(self, n: int, axis) -> bool:
-        size = {"model": self.tp, "data": self.dp,
-                "pod": self.pod}.get(axis, self.dp_total)
+    def _axis_size(self, axis) -> int:
         if isinstance(axis, tuple):
-            size = 1
+            size = 1 if axis else 0
             for a in axis:
-                size *= {"model": self.tp, "data": self.dp, "pod": self.pod}[a]
+                size *= self._axis_size(a)
+            return size
+        return {"model": self.tp, "data": self.dp, "pod": self.pod}.get(axis, 0)
+
+    def _div(self, n: int, axis) -> bool:
+        # an axis absent from the mesh (size 0 here) or of size 1 has
+        # nothing to shard over: report non-divisible so the spec falls
+        # back to replication instead of naming an axis the NamedSharding
+        # would reject (serving meshes are ("model",)-only)
+        size = self._axis_size(axis)
+        if size <= 1:
+            return False
         return n % size == 0 and n >= size
 
     # -- parameters --------------------------------------------------------------
@@ -173,6 +182,30 @@ class ShardingPlan:
                 parts[i] = "model"
                 break
         return P(*parts)
+
+    def pool_spec(self, shape: Tuple[int, ...]) -> P:
+        """Sharding of the serving backend's STACKED physical page pool
+        ``(L, P+1, page, Hkv, D)``.  Same tensor-parallel ladder as
+        `cache_spec`'s kv-like branch: kv-heads -> ``model`` when divisible,
+        else the split-K sequence fallback on the page-slot dim (GSPMD then
+        derives a flash-decoding-style softmax combine, the GQA plan whose
+        kv_heads < tp), else the head-feature dim, else replicate.  The
+        layer and page-index dims are NEVER sharded: a block-table entry
+        must address the same page on every shard (tier transfers and CoW
+        forks are per-page), and the trash page (index P) must exist on
+        every shard."""
+        Ldim, Pdim, Sdim, Hdim, Ddim = range(5)
+        parts: list = [None] * len(shape)
+        if self._div(shape[Hdim], "model"):
+            parts[Hdim] = "model"
+        elif self._div(shape[Sdim], "model"):
+            parts[Sdim] = "model"
+        elif self._div(shape[Ddim], "model"):
+            parts[Ddim] = "model"
+        return P(*parts)
+
+    def pool_sharding(self, shape: Tuple[int, ...]) -> NamedSharding:
+        return self._ns(self.pool_spec(shape))
 
     def cache_specs(self, abstract_cache) -> Dict:
         def leaf(path, x):

@@ -22,6 +22,21 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def serving_kernel_mode(requested: str = "auto", *, meshed: bool = False
+                        ) -> str:
+    """Resolve the serving backend's attention-kernel mode.
+
+    On TPU ``auto`` stays ``auto`` (real Pallas, meshed or not — GSPMD
+    partitions the kernel's batch grid).  On CPU a MESHED backend resolves
+    ``auto`` to ``ref``: the jnp oracle is plain HLO that GSPMD partitions
+    along the sharded kv-head (or split-K page-slot) axis, whereas
+    interpret-mode Pallas walks the page grid in software per device and
+    would serialize the mesh.  An explicit mode is always honored."""
+    if requested != "auto" or _on_tpu():
+        return requested
+    return "ref" if meshed else requested
+
+
 def _auto_tile(n: int, cap: int = 128) -> int:
     """Largest divisor of n that is <= cap (n itself when n <= cap).  A
     long sequence with only tiny divisors would silently degrade to an

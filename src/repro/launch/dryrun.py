@@ -1,5 +1,9 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# APPEND the forced host-device count (the dry-run needs 512 virtual
+# devices for the production meshes) without clobbering user-set XLA_FLAGS;
+# an existing forced count is respected.  Must precede any jax import.
+from repro.launch.mesh import force_host_device_count
+force_host_device_count(512)
 os.environ.setdefault("REPRO_ACCUM_MODE", "preferred")
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.

@@ -24,12 +24,17 @@ class DenseLM:
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.dtype)
         # fused paged serving step, jitted lazily.  jit compiles exactly
-        # once per distinct (arg shapes/dtypes, static kwargs) signature, so
-        # recording the signatures we dispatch gives an exact compile census
-        # without reaching into jit internals (see paged_compile_counts)
-        self._step_jit = None
-        self._scatter_jit = None
-        self._fork_jit = None
+        # once per distinct (arg shapes/dtypes, static kwargs, shardings)
+        # signature, so recording the signatures we dispatch gives an exact
+        # compile census without reaching into jit internals (see
+        # paged_compile_counts).  The jit caches are keyed by the pool
+        # sharding (None = single-device): one model instance can serve
+        # backends on different meshes — a tp=2 and a tp=4 node, or a
+        # meshed node next to an unsharded one — without either evicting
+        # the other's compiled steps or colliding in the census.
+        self._step_jits: Dict = {}
+        self._scatter_jits: Dict = {}
+        self._fork_jits: Dict = {}
         self._compile_keys = dict(step=set(), scatter=set(), fork=set())
 
     # -- parameters ---------------------------------------------------------
@@ -291,9 +296,21 @@ class DenseLM:
         toks = jnp.argmax(logits[:, :c.vocab], axis=-1).astype(jnp.int32)
         return toks, logits, k_pool, v_pool
 
+    @staticmethod
+    def _mesh_sig(pool_sharding):
+        """Census/jit-cache key component for a device-mesh placement:
+        (axis-name, size) pairs plus the pool PartitionSpec.  None (the
+        single-device path) keys separately from every mesh, and two mesh
+        shapes with identical bucket signatures no longer collide in the
+        bounded-recompilation census."""
+        if pool_sharding is None:
+            return None
+        return (tuple(pool_sharding.mesh.shape.items()),
+                str(pool_sharding.spec))
+
     def step_paged(self, params, token_ids, k_pool, v_pool, tables,
                    q_offsets, ctx_lens, last_idx, slot_pages, slot_offs,
-                   kernel_mode: str = "auto"):
+                   kernel_mode: str = "auto", pool_sharding=None):
         """ONE fused mixed-batch serving iteration over paged KV.
 
         token_ids: (B, Sq) int32, bucket-padded both ways.  Lane b's first
@@ -309,26 +326,42 @@ class DenseLM:
           where logits/argmax are read (0 for padded lanes).
         slot_pages/slot_offs: (L, B, Sq) destination of each token's KV;
           padded slots must point at a trash slot.
+        pool_sharding: NamedSharding of the stacked pools on a device mesh
+          (None = single device).  The scan carry's pool shardings are
+          PINNED to it via out_shardings so donation still aliases input to
+          output on every mesh; token ids and logits are pinned replicated
+          (both are host-fetched every step).
         Returns (argmax token ids (B,), logits (B, V), k_pool, v_pool).
         """
-        if self._step_jit is None:
+        key = self._mesh_sig(pool_sharding)
+        jit_fn = self._step_jits.get(key)
+        if jit_fn is None:
             # donate the pools: the backend unconditionally replaces its
             # references with the returned pools, and aliasing input to
             # output keeps peak memory at 1x the stacked pool per side
-            self._step_jit = jax.jit(self._step_paged_impl,
-                                     static_argnames=("kernel_mode",),
-                                     donate_argnums=(2, 3))
+            # (per shard, on a mesh)
+            kw = dict(static_argnames=("kernel_mode",),
+                      donate_argnums=(2, 3))
+            if pool_sharding is not None:
+                repl = jax.sharding.NamedSharding(
+                    pool_sharding.mesh, jax.sharding.PartitionSpec())
+                kw["out_shardings"] = (repl, repl, pool_sharding,
+                                       pool_sharding)
+            jit_fn = self._step_jits[key] = jax.jit(self._step_paged_impl,
+                                                    **kw)
         args = (params, token_ids, k_pool, v_pool, tables,
                 q_offsets, ctx_lens, last_idx, slot_pages, slot_offs)
-        self._compile_keys["step"].add(self._shape_sig(args, kernel_mode))
-        return self._step_jit(*args, kernel_mode=kernel_mode)
+        self._compile_keys["step"].add(
+            (key,) + self._shape_sig(args, kernel_mode))
+        return jit_fn(*args, kernel_mode=kernel_mode)
 
     @staticmethod
     def _scatter_paged_impl(k_pool, v_pool, layer_ids, pages, offs, ks, vs):
         return (k_pool.at[layer_ids, pages, offs].set(ks),
                 v_pool.at[layer_ids, pages, offs].set(vs))
 
-    def scatter_paged(self, k_pool, v_pool, layer_ids, pages, offs, ks, vs):
+    def scatter_paged(self, k_pool, v_pool, layer_ids, pages, offs, ks, vs,
+                      pool_sharding=None):
         """Swap-in / prefetch scatter of host-staged KV into the stacked
         pools.  Donating the pools is what keeps peak device memory at 1x
         per side — an undonated `.at[].set()` transiently materializes a
@@ -338,19 +371,26 @@ class DenseLM:
 
         layer_ids: (G, 1) int32; pages/offs: (G, n) int32 destinations;
         ks/vs: (G, n, Hkv, D) payloads.  Returns (k_pool, v_pool)."""
-        if self._scatter_jit is None:
-            self._scatter_jit = jax.jit(self._scatter_paged_impl,
-                                        donate_argnums=(0, 1))
+        key = self._mesh_sig(pool_sharding)
+        jit_fn = self._scatter_jits.get(key)
+        if jit_fn is None:
+            kw = dict(donate_argnums=(0, 1))
+            if pool_sharding is not None:
+                kw["out_shardings"] = (pool_sharding, pool_sharding)
+            jit_fn = self._scatter_jits[key] = jax.jit(
+                self._scatter_paged_impl, **kw)
         args = (k_pool, v_pool, layer_ids, pages, offs, ks, vs)
-        self._compile_keys["scatter"].add(self._shape_sig(args, "scatter"))
-        return self._scatter_jit(*args)
+        self._compile_keys["scatter"].add(
+            (key,) + self._shape_sig(args, "scatter"))
+        return jit_fn(*args)
 
     @staticmethod
     def _fork_paged_impl(k_pool, v_pool, layer_ids, src, dst):
         return (k_pool.at[layer_ids, dst].set(k_pool[layer_ids, src]),
                 v_pool.at[layer_ids, dst].set(v_pool[layer_ids, src]))
 
-    def fork_paged(self, k_pool, v_pool, layer_ids, src, dst):
+    def fork_paged(self, k_pool, v_pool, layer_ids, src, dst,
+                   pool_sharding=None):
         """Copy-on-write page fork: device-side copy of whole pages within
         the stacked pools (pool[l, dst] <- pool[l, src]), one fused donating
         dispatch for a whole batch of (layer, src, dst) triples.  The
@@ -361,12 +401,18 @@ class DenseLM:
         row-count bucket, censused under the "fork" key.
 
         layer_ids/src/dst: (F,) int32.  Returns (k_pool, v_pool)."""
-        if self._fork_jit is None:
-            self._fork_jit = jax.jit(self._fork_paged_impl,
-                                     donate_argnums=(0, 1))
+        key = self._mesh_sig(pool_sharding)
+        jit_fn = self._fork_jits.get(key)
+        if jit_fn is None:
+            kw = dict(donate_argnums=(0, 1))
+            if pool_sharding is not None:
+                kw["out_shardings"] = (pool_sharding, pool_sharding)
+            jit_fn = self._fork_jits[key] = jax.jit(
+                self._fork_paged_impl, **kw)
         args = (k_pool, v_pool, layer_ids, src, dst)
-        self._compile_keys["fork"].add(self._shape_sig(args, "fork"))
-        return self._fork_jit(*args)
+        self._compile_keys["fork"].add(
+            (key,) + self._shape_sig(args, "fork"))
+        return jit_fn(*args)
 
     @staticmethod
     def _shape_sig(args, kernel_mode: str):

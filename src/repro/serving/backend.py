@@ -297,25 +297,59 @@ class RealBackend(Backend):
     sync per step and grows without bound, so benchmarks and examples turn
     it off; with it off the only per-step host transfer is the argmax token
     ids.
+
+    TENSOR-PARALLEL NODE (``mesh=``): pass a 1-D ``("model",)`` mesh
+    (`launch.mesh.make_serving_mesh`) and one node becomes tp devices
+    serving one replica.  The stacked pools get the `ShardingPlan.pool_spec`
+    NamedSharding (kv-heads -> ``model``, split-K page-slot fallback for
+    GQA), params get the Megatron column/row specs, and every
+    `step_paged` / `scatter_paged` / `fork_paged` dispatch is a sharded jit
+    whose out_shardings pin the pool placement so donation still aliases
+    per shard.  Tier movement is PER-SHARD: the eager gather produces a
+    sharded array whose `copy_to_host_async` launches tp independent
+    device->host copies, and `np.asarray` assembles the full-head host
+    payload — host/spool/export formats are therefore pre-concatenated and
+    SHARD-COUNT-AGNOSTIC (a session swapped out at tp=2 imports at tp=4 or
+    on a sim node unchanged).  All byte accounting (admission, store,
+    census payloads) stays LOGICAL/global; `pool_device_bytes` exposes the
+    per-device physical footprint (~1/tp of the pool).
     """
 
     def __init__(self, cfg, model, params, *, n_pages: int = 64,
                  page_size: int = 8, kernel_mode: str = "auto",
                  spool_dir: Optional[str] = None, mgr=None,
-                 trace_logits: bool = True):
+                 trace_logits: bool = True, mesh=None):
+        import jax
         import jax.numpy as jnp
+
+        from repro.kernels.ops import serving_kernel_mode
         self.cfg = cfg
         self.model = model
         self.params = params
         self.n_pages = n_pages
         self.page_size = page_size
-        self.kernel_mode = kernel_mode
+        self.mesh = mesh
+        self.tp = 1
+        self._pool_sharding = None
+        self.kernel_mode = serving_kernel_mode(kernel_mode,
+                                               meshed=mesh is not None)
         self.trace_logits = trace_logits
         self.dtype = jnp.dtype(cfg.dtype)
         L, Hkv, D = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
         shape = (L, n_pages + 1, page_size, Hkv, D)
         self.k_pool = jnp.zeros(shape, self.dtype)
         self.v_pool = jnp.zeros(shape, self.dtype)
+        if mesh is not None:
+            from repro.distributed.sharding import ShardingPlan
+            plan = ShardingPlan(cfg, mesh)
+            self.tp = plan.tp
+            self._pool_sharding = plan.pool_sharding(shape)
+            self.k_pool = jax.device_put(self.k_pool, self._pool_sharding)
+            self.v_pool = jax.device_put(self.v_pool, self._pool_sharding)
+            # Megatron column/row TP on the block weights; a spec whose dim
+            # is not divisible falls back to replication per the plan
+            self.params = jax.device_put(
+                params, plan.params_shardings(params))
         self.alloc: List[PagedAllocator] = [
             PagedAllocator(n_pages, page_size) for _ in range(L)]
         self.host: Dict[Tuple[str, int], object] = {}  # (sid, layer) ->
@@ -337,7 +371,10 @@ class RealBackend(Backend):
     def compile_counts(self) -> Dict[str, int]:
         """Distinct XLA compilations of the fused serving step ("step") and
         the donating tier-scatter ("scatter") — at most one per shape
-        bucket; shared across backends serving the same model."""
+        bucket PER MESH PLACEMENT; shared across backends serving the same
+        model.  Census keys carry the (mesh shape, pool PartitionSpec)
+        signature, so two mesh shapes with identical bucket signatures
+        count separately instead of silently colliding."""
         return self.model.paged_compile_counts()
 
     def attach(self, mgr) -> None:
@@ -378,6 +415,14 @@ class RealBackend(Backend):
 
     def hbm_kv_budget(self) -> float:
         return self.n_pages * self.page_size * self._token_bytes
+
+    def pool_device_bytes(self) -> int:
+        """Physical bytes of ONE device's shard of the stacked pools (both
+        sides).  ~1/tp of the global pool on a mesh; equals the global pool
+        at tp=1.  Purely observational — every admission/store decision
+        uses the LOGICAL global bytes above."""
+        shard = self.k_pool.addressable_shards[0].data
+        return 2 * shard.nbytes
 
     def kv_in_use(self, running) -> float:
         # used_pages includes leased pages: an in-flight swap-out still
@@ -486,7 +531,11 @@ class RealBackend(Backend):
         and START their device->host copies without waiting: one async
         copy per side per (n_tokens, n_pages) group, sliced on device to
         the valid token range (padding never crosses the bus or counts in
-        stats).  Returns (groups, empties): in-flight device arrays and
+        stats).  On a mesh the gathered slice inherits the pool's sharding,
+        so `copy_to_host_async` launches tp INDEPENDENT per-shard copies
+        (tp-way host link parallelism) and the later `np.asarray` assembles
+        the full-head host payload — shard-count-agnostic by construction.
+        Returns (groups, empties): in-flight device arrays and
         already-realized zero-page payloads."""
         import jax.numpy as jnp
         c = self.cfg
@@ -611,7 +660,8 @@ class RealBackend(Backend):
                 vs[i, :n] = payloads[l]["v"]
             self.k_pool, self.v_pool = self.model.scatter_paged(
                 self.k_pool, self.v_pool, jnp.asarray(li), jnp.asarray(pg),
-                jnp.asarray(off), jnp.asarray(ks), jnp.asarray(vs))
+                jnp.asarray(off), jnp.asarray(ks), jnp.asarray(vs),
+                pool_sharding=self._pool_sharding)
             nbytes += float(ks[:G, :n].nbytes + vs[:G, :n].nbytes)
         # the transfer must NOT hold the pools themselves: every subsequent
         # step_paged/scatter_paged DONATES them, deleting the arrays under
@@ -865,7 +915,8 @@ class RealBackend(Backend):
                 f_li[i], f_src[i], f_dst[i] = l, src, dst
             self.k_pool, self.v_pool = self.model.fork_paged(
                 self.k_pool, self.v_pool, jnp.asarray(f_li),
-                jnp.asarray(f_src), jnp.asarray(f_dst))
+                jnp.asarray(f_src), jnp.asarray(f_dst),
+                pool_sharding=self._pool_sharding)
             self.stats["cow_forks"] += len(forks)
         for sid, ids in zip(sids, ids_by_lane):
             self._extend_all(sid, len(ids))
@@ -907,7 +958,8 @@ class RealBackend(Backend):
         toks_dev, logits, self.k_pool, self.v_pool = self.model.step_paged(
             self.params, ids_p, self.k_pool, self.v_pool, tables,
             jnp.asarray(qoff), jnp.asarray(ctx), jnp.asarray(last), pg, off,
-            kernel_mode=self.kernel_mode)
+            kernel_mode=self.kernel_mode,
+            pool_sharding=self._pool_sharding)
         tok_np = np.asarray(toks_dev[:B])        # token ids only — no full-
         lg_np = None                             # logits sync unless tracing
         if self.trace_logits:
@@ -1191,6 +1243,7 @@ def make_backend(cfg, model, params, **kw):
     engine/manager/cluster code never branches on state kind."""
     if cfg.family in ("mamba2", "xlstm", "hybrid"):
         from repro.serving.state_backend import StateBackend
+        kw.pop("mesh", None)         # TP serving is transformer-only so far
         return StateBackend(cfg, model, params, **kw)
     kw.pop("n_slots", None)          # slot pools are a recurrent concept
     return RealBackend(cfg, model, params, **kw)
