@@ -4,14 +4,17 @@ by 1e6 into the us column; the derived field says what they mean).
 
 ``--serving`` aggregates the serving artifacts
 (results/bench/BENCH_step.json + BENCH_cluster.json, plus
-BENCH_sharing.json and BENCH_recurrent.json when present) into the
+BENCH_sharing.json, BENCH_recurrent.json and BENCH_quant.json when
+present) into the
 top-level ``results/bench/BENCH_serving.json`` scorecard: steady-state TBT
 median/p99, the long-prompt-interference TBT bound, the async swap-in
 overlap profile (advisory-led residual stall must stay ~0), the
 prefix-sharing footprint ratio (peak pages over the unshared cost for a
 1000-session shared-system-prompt cohort — must stay sublinear), the
 recurrent-state profile (O(1) slot-blob swap bytes vs linear paged KV and
-the sessions/node headroom multiple, token-exact parity required), cluster
+the sessions/node headroom multiple, token-exact parity required), the
+quantized-KV-tier profile (in-place int8 session headroom over the fp
+baseline, kernel parity error, and the sim quantize-vs-swap A/B), cluster
 throughput, compile counts, and copied bytes — the one file CI uploads and
 gates (decode-p99-under-interference must not regress vs the committed
 copy; footprint ratio bounded absolutely)."""
@@ -66,6 +69,9 @@ def aggregate_serving() -> dict:
     recurrent_f = RESULTS / "BENCH_recurrent.json"
     recurrent = json.loads(recurrent_f.read_text()) \
         if recurrent_f.exists() else None    # optional locally, like sharing
+    quant_f = RESULTS / "BENCH_quant.json"
+    quant = json.loads(quant_f.read_text()) if quant_f.exists() \
+        else None                            # optional locally, like sharing
 
     cfgs = list(step["configs"].values())
     medians = sorted(c["decode_ms_median"] for c in cfgs
@@ -136,6 +142,23 @@ def aggregate_serving() -> dict:
             headroom_ratio=recurrent.get("headroom_ratio"),
             parity_ok=recurrent.get("parity_ok"),
         ),
+        quant=None if quant is None else dict(
+            headroom_ratio=quant.get("headroom", {}).get("ratio"),
+            peak_resident_quant=quant.get("headroom", {}).get(
+                "quant", {}).get("peak_resident_sessions"),
+            peak_resident_fp=quant.get("headroom", {}).get(
+                "fp", {}).get("peak_resident_sessions"),
+            steady_compiles=quant.get("headroom", {}).get(
+                "quant", {}).get("steady_compiles"),
+            parity_quant_vs_fp=quant.get("parity", {}).get("quant_vs_fp"),
+            parity_pallas_vs_oracle=quant.get("parity",
+                                              {}).get("pallas_vs_oracle"),
+            sim_transfer_bytes_ratio=quant.get("sim_ab", {}).get(
+                "transfer_bytes_ratio"),
+            sim_tpot_ratio=quant.get("sim_ab", {}).get("tpot_ratio"),
+            sim_quantized_sessions=quant.get("sim_ab", {}).get(
+                "quantize_on", {}).get("quantized_sessions"),
+        ),
         compile_counts=step.get("compile_counts", {}),
         copied_bytes=sum(c.get("copied_bytes", 0.0) for c in cfgs),
     )
@@ -159,8 +182,9 @@ def main() -> None:
 
     from benchmarks import fig_serving, fig_tokens
     from benchmarks.roofline_table import emit_roofline
-    from benchmarks.kernel_bench import (bench_kernels, bench_recurrent,
-                                         bench_sharing, bench_step)
+    from benchmarks.kernel_bench import (bench_kernels, bench_quant,
+                                         bench_recurrent, bench_sharing,
+                                         bench_step)
 
     t0 = time.time()
     sections = {
@@ -188,6 +212,7 @@ def main() -> None:
         "step": bench_step,
         "sharing": bench_sharing,
         "recurrent": bench_recurrent,
+        "quant": bench_quant,
     }
     for name, fn in sections.items():
         if args.only and args.only != name:

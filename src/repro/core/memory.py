@@ -116,6 +116,11 @@ class KVEntry:
     # n_layers == 1 — but the ledger keeps per-kind totals so a mixed
     # cluster can report where its memory actually goes
     kind: str = "kv"
+    # tokens held in INT8 pages of the quantized-in-HBM tier (already
+    # reflected in bytes_per_layer by the caller's repricing; kept so the
+    # policy can tell a compressed entry from an fp one and re-inflate its
+    # geometry on swap-out)
+    quant_tokens: int = 0
 
     def __post_init__(self):
         if not self.tier:
@@ -182,7 +187,7 @@ class TieredKVStore:
             self._acct(DISK, e.kind, -e.total_bytes)
 
     def grow(self, session_id: str, new_tokens: int,
-             new_bytes_per_layer: int) -> None:
+             new_bytes_per_layer: int, quant_tokens: int = 0) -> None:
         """After a turn, the session KV grew; it is resident in HBM."""
         e = self.entries[session_id]
         for l, t in enumerate(e.tier):
@@ -192,8 +197,34 @@ class TieredKVStore:
             e.on_disk = False      # disk copy is stale after growth
         e.n_tokens += new_tokens
         e.bytes_per_layer = new_bytes_per_layer
+        e.quant_tokens = quant_tokens
         e.tier = [HBM] * e.n_layers
         self._acct(HBM, e.kind, e.total_bytes)
+
+    def reprice(self, session_id: str, new_bytes_per_layer: int,
+                quant_tokens: int = 0) -> int:
+        """Same tokens, new bytes: the quantized-in-HBM tier compresses a
+        session's pages in place (or re-inflates them on swap-out /
+        dequant), changing its per-layer byte price without moving a layer
+        between tiers.  Every tier currently holding a layer — and the
+        persistent disk copy, whose accounting mirrors total_bytes — is
+        re-charged through the `_acct` funnel.  Returns the byte delta on
+        the HBM ledger (negative = freed)."""
+        e = self.entries[session_id]
+        if new_bytes_per_layer == e.bytes_per_layer:
+            e.quant_tokens = quant_tokens
+            return 0
+        delta = new_bytes_per_layer - e.bytes_per_layer
+        hbm_delta = 0
+        for l, t in enumerate(e.tier):
+            self._acct(t, e.kind, delta)
+            if t == HBM:
+                hbm_delta += delta
+        if e.on_disk:
+            self._acct(DISK, e.kind, delta * e.n_layers)
+        e.bytes_per_layer = new_bytes_per_layer
+        e.quant_tokens = quant_tokens
+        return hbm_delta
 
     # -- placement -------------------------------------------------------------
 

@@ -27,10 +27,15 @@ class FetchState:
 class NodeManager:
     def __init__(self, node_id: int, cfg, cost: CostModel,
                  host_budget: Optional[float] = None,
-                 pod_of=lambda node: 0):
+                 pod_of=lambda node: 0, enable_quantize: bool = True):
         self.node_id = node_id
         self.cfg = cfg
         self.cost = cost
+        # quantize-before-swap under HBM pressure (the in-HBM int8 tier);
+        # off = the pre-quantization eviction policy, the sim A/B lever
+        self.enable_quantize = enable_quantize
+        # advisory-fed reuse predictions: sid -> absolute expected use time
+        self.expected_use: Dict[str, float] = {}
         # store granularity: transformers tier KV layer-by-layer; recurrent
         # (mamba2/xlstm) and hybrid sessions move as ONE fixed-size state
         # blob, so their store entries carry a single "layer" unit
@@ -52,7 +57,9 @@ class NodeManager:
         self.backend = None
         self.stats = dict(prefetches=0, migrations=0, migrated_bytes=0.0,
                           evictions=0, disk_writes=0, recoveries=0,
-                          swaps_in=0, promoted_layers=0)
+                          swaps_in=0, promoted_layers=0,
+                          quantized_sessions=0, quantize_freed_bytes=0.0,
+                          evicted_bytes=0.0)
 
     def register_peers(self, managers: Dict[int, "NodeManager"]) -> None:
         self.peers = managers
@@ -73,6 +80,9 @@ class NodeManager:
     def on_advisory(self, adv: AdvisoryRequest, kv_node: Optional[int],
                     now: float, to_hbm: bool = True) -> None:
         sid = adv.session_id
+        # the advisory's lead time IS the reuse prediction the
+        # quantize-vs-swap policy consumes (no expected_arrival = imminent)
+        self.note_reuse(sid, now + (adv.expected_arrival or 0.0))
         e = self.store.entries.get(sid)
         if e is None:
             if kv_node is None or kv_node == self.node_id:
@@ -197,42 +207,133 @@ class NodeManager:
 
     def mark_resident(self, sid: str, n_tokens: int,
                       bytes_per_layer: float, priority: int = 0,
-                      shared_tokens: int = 0) -> None:
+                      shared_tokens: int = 0, quant_tokens: int = 0) -> None:
         """After serving, the session's (grown) KV is in HBM on this node.
         ``shared_tokens`` of that context live in pages shared with other
         sessions (real-mode prefix sharing) — the backend already excluded
         them from ``bytes_per_layer``, so the ledger never double-charges a
-        physical page; the entry records the span for observability."""
+        physical page; the entry records the span for observability.
+        ``quant_tokens`` of it sit in int8 pages (already reflected in
+        ``bytes_per_layer`` by the backend's exact page pricing)."""
         if sid in self.store.entries:
-            self.store.grow(sid, 0, int(bytes_per_layer))
+            self.store.grow(sid, 0, int(bytes_per_layer), quant_tokens)
             e = self.store.entries[sid]
             e.n_tokens = n_tokens
         else:
             e = self.store.admit(sid, n_tokens, int(bytes_per_layer),
                                  self.n_layers, tier=HBM, priority=priority,
                                  kind=getattr(self.cost, "state_kind", "kv"))
+            e.quant_tokens = quant_tokens
         e.shared_tokens = shared_tokens
         self.fetches.pop(sid, None)
+
+    # -- reuse prediction (feeds quantize-vs-swap) ---------------------------------------
+
+    def note_reuse(self, sid: str, at: float) -> None:
+        """Record when this session is next expected to serve."""
+        self.expected_use[sid] = at
+
+    def reuse_distance(self, sid: str, now: float) -> Optional[float]:
+        """Seconds until the predicted next use; None = no advisory ever
+        mentioned this session (no idea when it returns)."""
+        t = self.expected_use.get(sid)
+        return None if t is None else max(0.0, t - now)
 
     # -- cooperative memory management ---------------------------------------------------
 
     def on_memory_pressure(self, bytes_needed: float, now: float,
                            protect: Optional[set] = None) -> float:
-        evicted = self.store.evict_hbm_to_fit(int(bytes_needed), protect)
-        self.stats["evictions"] += len(evicted)
-        # write-back is free when a persistent copy exists (the invariant);
-        # otherwise the block demotes to host (no copy-out modeled: layer
-        # KV writes stream through the background disk thread)
-        for sid, l in evicted:
-            if self.backend is not None:
-                self.backend.evict_layer(sid, l)
-            self._disk_writethrough(sid, now)
-        if evicted and self.backend is not None:
-            # pressure wants the pages NOW: every victim layer's gather was
-            # launched above and the copies overlap each other — one
-            # barrier reclaims all their leased pages
-            self.backend.drain_transfers(OUT)
+        # QUANTIZE BEFORE SWAP: victims whose predicted reuse is near stay
+        # serving-warm at the int8 tier's price (one cheap in-HBM round
+        # trip, zero PCIe); only far-reuse — or advisory-less — sessions
+        # fall through to the eviction path below.  With no advisories
+        # nothing quantizes and the path is byte-identical to before.
+        if self.enable_quantize:
+            bytes_needed -= self._quantize_pass(bytes_needed, now,
+                                                protect or set())
+        if bytes_needed > 0:
+            evicted = self.store.evict_hbm_to_fit(int(bytes_needed), protect)
+            self.stats["evictions"] += len(evicted)
+            # write-back is free when a persistent copy exists (the
+            # invariant); otherwise the block demotes to host (no copy-out
+            # modeled: layer KV writes stream through the background disk
+            # thread)
+            for sid, l in evicted:
+                self.stats["evicted_bytes"] += \
+                    self.store.entries[sid].bytes_per_layer
+                if self.backend is not None:
+                    self.backend.evict_layer(sid, l)
+                self._disk_writethrough(sid, now)
+            if evicted and self.backend is not None:
+                # pressure wants the pages NOW: every victim layer's gather
+                # was launched above and the copies overlap each other —
+                # one barrier reclaims all their leased pages
+                self.backend.drain_transfers(OUT)
+            elif self.backend is None:
+                # sim mirror of the real backend's swap re-inflation: tier
+                # payloads are fp, so a quantized victim that leaves HBM
+                # reprices back to full-precision geometry (otherwise the
+                # A/B's transfer bytes would flatter the quantized arm)
+                for sid in {s for s, _ in evicted}:
+                    e = self.store.entries[sid]
+                    if e.quant_tokens:
+                        self.store.reprice(
+                            sid,
+                            int(self.cost.session_kv_bytes(e.n_tokens))
+                            // max(self.n_layers, 1), 0)
         return self.store.free(HBM)
+
+    def _quantize_pass(self, bytes_needed: float, now: float,
+                       protect: set) -> float:
+        """Compress near-reuse HBM victims in place; returns the HBM bytes
+        freed.  Largest sessions first (most bytes recovered per compress
+        dispatch); only fully-HBM-resident entries qualify — quantization
+        is layer-lockstep by construction."""
+        if bytes_needed <= 0:
+            return 0.0
+        freed = 0.0
+        victims = sorted(
+            (e for e in self.store.entries.values()
+             if not e.pinned and e.session_id not in protect
+             and e.quant_tokens < e.n_tokens
+             and all(t == HBM for t in e.tier)),
+            key=lambda e: -e.total_bytes)
+        for e in victims:
+            if freed >= bytes_needed:
+                break
+            if not self.cost.prefer_quantize(
+                    e.n_tokens, self.reuse_distance(e.session_id, now)):
+                continue
+            got = self._quantize_session(e, now)
+            if got > 0:
+                freed += got
+                self.stats["quantized_sessions"] += 1
+                self.stats["quantize_freed_bytes"] += got
+        return freed
+
+    def _quantize_session(self, e, now: float) -> float:
+        """One victim's compress, on either backend: real mode runs the
+        fused `compress_paged` dispatch (which also reprices the store);
+        sim mode reprices the entry to the cost model's int8 geometry.
+        Both charge `CostModel.compress_time` through the session's
+        ready_at horizon, so a victim that serves again immediately pays
+        the same residual on both backends (sim/real agreement by
+        construction)."""
+        sid = e.session_id
+        if self.backend is not None:
+            freed = float(self.backend.quantize_session(sid))
+        else:
+            new_bpl = int(self.cost.session_kv_bytes(e.n_tokens, e.n_tokens)
+                          // max(self.n_layers, 1))
+            if new_bpl >= e.bytes_per_layer:
+                return 0.0
+            freed = float(-self.store.reprice(sid, new_bpl, e.n_tokens))
+        if freed > 0:
+            done = now + self.cost.compress_time(e.n_tokens)
+            fs = self.fetches.setdefault(
+                sid, FetchState(ready_at=[now] * e.n_layers))
+            fs.ready_at = [max(r, done) for r in fs.ready_at]
+        return freed
 
     def flush_session(self, sid: str, now: float) -> None:
         """Write-through one session's (possibly regrown) KV to disk."""
@@ -246,6 +347,7 @@ class NodeManager:
         self.store.drop(sid)
         self.fetches.pop(sid, None)
         self.disk_done.pop(sid, None)
+        self.expected_use.pop(sid, None)
         if self.backend is not None:
             self.backend.drop(sid)
 
@@ -327,3 +429,4 @@ class NodeManager:
         self.chan = {k: 0.0 for k in self.chan}
         self.fetches.clear()
         self.disk_done.clear()
+        self.expected_use.clear()

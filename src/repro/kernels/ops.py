@@ -16,6 +16,8 @@ from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill as _flash
 from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.paged_attention import paged_chunk_attention as _chunk
+from repro.kernels.paged_attention import \
+    paged_chunk_attention_quant as _chunk_quant
 
 
 def _on_tpu() -> bool:
@@ -64,15 +66,24 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens,
 
 
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, q_offsets,
-                          ctx_lens, mode: str = "auto", bq=None):
+                          ctx_lens, mode: str = "auto", bq=None,
+                          quant=None):
     """Unified mixed-batch serving attention (decode = 1-token chunk).
-    mode: auto | pallas | interpret | ref"""
+    mode: auto | pallas | interpret | ref.  ``quant``: optional
+    (kq_pages, vq_pages, k_scales, v_scales, page_quant) mixed-precision
+    shadow state — pages flagged quantized dequantize inside the kernel
+    (or oracle) instead of reading the fp pool."""
     if mode == "ref":
         return ref.paged_chunk_attention_ref(q, k_pages, v_pages,
                                              block_tables, q_offsets,
-                                             ctx_lens)
+                                             ctx_lens, quant=quant)
     interpret = not _on_tpu() if mode == "auto" else (mode == "interpret")
     bq = _auto_tile(q.shape[1]) if bq is None else bq
+    if quant is not None:
+        kq, vq, ks, vs, pq = quant
+        return _chunk_quant(q, k_pages, v_pages, kq, vq, ks, vs, pq,
+                            block_tables, q_offsets, ctx_lens,
+                            bq=bq, interpret=interpret)
     return _chunk(q, k_pages, v_pages, block_tables, q_offsets, ctx_lens,
                   bq=bq, interpret=interpret)
 

@@ -146,6 +146,124 @@ def _chunk_kernel(qoff_ref, ctx_ref, tables_ref,   # scalar prefetch (SMEM)
         o_ref[0, 0] = out.reshape(bq, G, -1).astype(o_ref.dtype)
 
 
+def _chunk_kernel_quant(qoff_ref, ctx_ref, tables_ref,  # scalar prefetch
+                        pq_ref, ks_ref, vs_ref,         # (SMEM)
+                        q_ref, k_ref, v_ref,            # VMEM blocks
+                        kq_ref, vq_ref,                 # int8 shadow tiles
+                        o_ref,                          # output block
+                        m_ref, l_ref, acc_ref,          # VMEM scratch
+                        *, bq: int, G: int):
+    """Mixed-precision variant of `_chunk_kernel`: both the fp tile and the
+    int8 shadow tile of the SAME page arrive per grid step (identical index
+    map), and the per-page precision bit + fp32 scales ride scalar-prefetch
+    SMEM next to the block tables.  Dequant happens here, in-register —
+    a quantized page never needs a re-inflation copy in HBM."""
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    p = pl.program_id(3)
+    n_pages = pl.num_programs(3)
+    page = k_ref.shape[1]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[b]
+    qoff = qoff_ref[b]
+    start = p * page
+    q_hi = qoff + (qi + 1) * bq - 1
+    valid = jnp.minimum(ctx, q_hi + 1) - start
+
+    @pl.when(valid > 0)
+    def _compute():
+        pid = tables_ref[b, p]
+        isq = pq_ref[pid] > 0
+        q = q_ref[0, 0].reshape(bq * G, -1).astype(jnp.float32)
+        k = jnp.where(isq,
+                      kq_ref[0, :, 0].astype(jnp.float32) * ks_ref[pid],
+                      k_ref[0, :, 0].astype(jnp.float32))   # (page, D)
+        v = jnp.where(isq,
+                      vq_ref[0, :, 0].astype(jnp.float32) * vs_ref[pid],
+                      v_ref[0, :, 0].astype(jnp.float32))
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s / np.sqrt(q.shape[-1])                       # (bq*G, page)
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = qoff + qi * bq + rows
+        kpos = start + cols
+        s = jnp.where((qpos >= kpos) & (kpos < ctx), s, -1e30)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * corr + pexp.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.reshape(bq, G, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def paged_chunk_attention_quant(q, k_pages, v_pages, kq_pages, vq_pages,
+                                k_scales, v_scales, page_quant,
+                                block_tables, q_offsets, ctx_lens, *,
+                                bq: int = 128, interpret: bool = True):
+    """`paged_chunk_attention` over mixed-precision pools: pages whose
+    ``page_quant`` bit is set are read from the int8 shadow pool and
+    dequantized in the kernel body with their per-page fp32 scale; the
+    rest read the fp pool.  kq/vq_pages: (P, page, Hkv, D) int8;
+    k/v_scales, page_quant: (P,).  Same grid/masking contract as the
+    all-fp kernel."""
+    B, Sq, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    maxp = block_tables.shape[1]
+    bq = min(bq, Sq)
+    assert Sq % bq == 0
+    q5 = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+
+    grid = (B, Hkv, Sq // bq, maxp)
+    kern = functools.partial(_chunk_kernel_quant, bq=bq, G=G)
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, D),
+        lambda b, h, qi, p, qo, ctx, tab, pq, ks, vs: (tab[b, p], 0, h, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, G, D),
+                         lambda b, h, qi, p, qo, ctx, tab, pq, ks, vs:
+                         (b, h, qi, 0, 0)),
+            kv_spec, kv_spec, kv_spec, kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, G, D),
+                               lambda b, h, qi, p, qo, ctx, tab, pq, ks, vs:
+                               (b, h, qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq, G, D), q.dtype),
+        interpret=interpret,
+    )(q_offsets, ctx_lens, block_tables,
+      page_quant.astype(jnp.int32), k_scales.astype(jnp.float32),
+      v_scales.astype(jnp.float32), q5, k_pages, v_pages,
+      kq_pages, vq_pages)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, D)
+
+
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, q_offsets,
                           ctx_lens, *, bq: int = 128,

@@ -1,0 +1,37 @@
+"""Shared INT8 symmetric quantization idiom.
+
+One scale per tensor (or per leading group when ``axis`` reduces a
+subset of dims): ``scale = max|x| / 127``, values round-clipped into
+[-127, 127].  Used by the gradient-compression collective
+(`training/compression.py`) and the quantized KV tier
+(`serving/backend.py` / `kernels/paged_attention.py`), so the scale and
+clamp conventions can never drift between the two paths.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+
+Axis = Union[int, Sequence[int], None]
+
+
+def quantize_int8(x: jnp.ndarray, axis: Axis = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization.  ``axis=None`` → one scalar scale for
+    the whole tensor; otherwise the scale reduces over ``axis`` and keeps
+    the remaining dims (keepdims=False).  Returns ``(q, scale)`` with
+    ``q`` int8 and ``scale`` float32 such that ``q * scale ≈ x``."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    s = scale if axis is None else jnp.expand_dims(
+        scale, tuple(axis) if isinstance(axis, (tuple, list)) else axis)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of `quantize_int8`.  ``scale`` must broadcast against ``q``
+    (expand trailing dims at the call site when it was axis-reduced)."""
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)

@@ -35,7 +35,7 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens):
 
 
 def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables,
-                              q_offsets, ctx_lens):
+                              q_offsets, ctx_lens, quant=None):
     """Mixed-batch paged attention: each lane is a chunk of queries.
 
     q:            (B, Sq, H, D) — lane b's token i at position q_offsets[b]+i
@@ -44,6 +44,11 @@ def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables,
     q_offsets:    (B,) int32 — cached context before the chunk
     ctx_lens:     (B,) int32 — total valid KV incl. the chunk (0 = padded
                   lane, output zeroed to match the kernel's page skip)
+    quant:        optional (kq_pages, vq_pages, k_scales, v_scales,
+                  page_quant) — int8 shadow pools (P, page, Hkv, D),
+                  per-page fp32 scales (P,), and the per-page precision
+                  bit (P,) int32; pages flagged quantized are dequantized
+                  from the shadow pool, the rest read full precision
     returns:      (B, Sq, H, D)
     """
     B, Sq, H, D = q.shape
@@ -52,8 +57,19 @@ def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables,
     maxp = block_tables.shape[1]
     S = maxp * page
 
-    k = k_pages[block_tables].reshape(B, S, Hkv, D)
-    v = v_pages[block_tables].reshape(B, S, Hkv, D)
+    k = k_pages[block_tables]
+    v = v_pages[block_tables]
+    if quant is not None:
+        kq_pages, vq_pages, k_scales, v_scales, page_quant = quant
+        isq = (page_quant[block_tables] > 0)[..., None, None, None]
+        kd = kq_pages[block_tables].astype(jnp.float32) \
+            * k_scales[block_tables][..., None, None, None]
+        vd = vq_pages[block_tables].astype(jnp.float32) \
+            * v_scales[block_tables][..., None, None, None]
+        k = jnp.where(isq, kd, k.astype(jnp.float32))
+        v = jnp.where(isq, vd, v.astype(jnp.float32))
+    k = k.reshape(B, S, Hkv, D)
+    v = v.reshape(B, S, Hkv, D)
     qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
     s = s / np.sqrt(D)

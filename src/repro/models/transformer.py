@@ -35,7 +35,10 @@ class DenseLM:
         self._step_jits: Dict = {}
         self._scatter_jits: Dict = {}
         self._fork_jits: Dict = {}
-        self._compile_keys = dict(step=set(), scatter=set(), fork=set())
+        self._fork_quant_jits: Dict = {}
+        self._compress_jits: Dict = {}
+        self._compile_keys = dict(step=set(), scatter=set(), fork=set(),
+                                  compress=set())
 
     # -- parameters ---------------------------------------------------------
 
@@ -260,7 +263,7 @@ class DenseLM:
 
     def _step_paged_impl(self, params, token_ids, k_pool, v_pool, tables,
                          q_offsets, ctx_lens, last_idx, slot_pages,
-                         slot_offs, *, kernel_mode):
+                         slot_offs, quant=None, *, kernel_mode):
         from repro.kernels import ops
         c = self.cfg
         ids = jnp.asarray(token_ids, jnp.int32)
@@ -269,7 +272,15 @@ class DenseLM:
         positions = q_offsets[:, None] + jnp.arange(Sq)[None, :]
 
         def body(x, xs):
-            w, kp, vp, table, sp, so = xs
+            if quant is None:
+                w, kp, vp, table, sp, so = xs
+                qt = None
+            else:
+                # per-layer slices of the int8 shadow pools, scales and the
+                # precision bits ride the scan as read-only xs — only
+                # compress_paged ever writes them
+                w, kp, vp, table, sp, so, kq, vq, ks, vs, pq = xs
+                qt = (kq, vq, ks, vs, pq)
             h = L.rms_norm(x, w["ln1"], c.norm_eps)
             q = (h @ w["wq"]).reshape(B, Sq, c.n_heads, c.d_head)
             k = (h @ w["wk"]).reshape(B, Sq, c.n_kv_heads, c.d_head)
@@ -282,15 +293,18 @@ class DenseLM:
             kp = kp.at[sp, so].set(k.astype(kp.dtype))
             vp = vp.at[sp, so].set(v.astype(vp.dtype))
             o = ops.paged_chunk_attention(q, kp, vp, table, q_offsets,
-                                          ctx_lens, mode=kernel_mode)
+                                          ctx_lens, mode=kernel_mode,
+                                          quant=qt)
             x = x + o.reshape(B, Sq, -1) @ w["wo"]
             h2 = L.rms_norm(x, w["ln2"], c.norm_eps)
             x = x + L.swiglu(h2, w["w1"], w["w3"], w["w2"])
             return x, (kp, vp)
 
-        x, (k_pool, v_pool) = jax.lax.scan(
-            body, x, (params["blocks"], k_pool, v_pool, tables,
-                      slot_pages, slot_offs))
+        xs = (params["blocks"], k_pool, v_pool, tables,
+              slot_pages, slot_offs)
+        if quant is not None:
+            xs = xs + tuple(quant)
+        x, (k_pool, v_pool) = jax.lax.scan(body, x, xs)
         x = L.rms_norm(x, params["ln_f"], c.norm_eps)
         logits = self._unembed(params, x[jnp.arange(B), last_idx])
         toks = jnp.argmax(logits[:, :c.vocab], axis=-1).astype(jnp.int32)
@@ -310,7 +324,8 @@ class DenseLM:
 
     def step_paged(self, params, token_ids, k_pool, v_pool, tables,
                    q_offsets, ctx_lens, last_idx, slot_pages, slot_offs,
-                   kernel_mode: str = "auto", pool_sharding=None):
+                   quant=None, kernel_mode: str = "auto",
+                   pool_sharding=None):
         """ONE fused mixed-batch serving iteration over paged KV.
 
         token_ids: (B, Sq) int32, bucket-padded both ways.  Lane b's first
@@ -326,6 +341,11 @@ class DenseLM:
           where logits/argmax are read (0 for padded lanes).
         slot_pages/slot_offs: (L, B, Sq) destination of each token's KV;
           padded slots must point at a trash slot.
+        quant: optional mixed-precision shadow state — (kq_pool, vq_pool,
+          k_scale (L, P), v_scale (L, P), page_quant (L, P) int32); pages
+          whose bit is set dequantize from the int8 pool inside the
+          attention kernel.  None keeps the all-fp signature (and its jit
+          cache entries) bit-identical to a node that never quantizes.
         pool_sharding: NamedSharding of the stacked pools on a device mesh
           (None = single device).  The scan carry's pool shardings are
           PINNED to it via out_shardings so donation still aliases input to
@@ -350,7 +370,8 @@ class DenseLM:
             jit_fn = self._step_jits[key] = jax.jit(self._step_paged_impl,
                                                     **kw)
         args = (params, token_ids, k_pool, v_pool, tables,
-                q_offsets, ctx_lens, last_idx, slot_pages, slot_offs)
+                q_offsets, ctx_lens, last_idx, slot_pages, slot_offs,
+                quant)
         self._compile_keys["step"].add(
             (key,) + self._shape_sig(args, kernel_mode))
         return jit_fn(*args, kernel_mode=kernel_mode)
@@ -412,6 +433,92 @@ class DenseLM:
         args = (k_pool, v_pool, layer_ids, src, dst)
         self._compile_keys["fork"].add(
             (key,) + self._shape_sig(args, "fork"))
+        return jit_fn(*args)
+
+    @staticmethod
+    def _fork_paged_quant_impl(k_pool, v_pool, kq_pool, vq_pool,
+                               k_scale, v_scale, layer_ids, src, dst, srcq):
+        isq = srcq[:, None, None, None] > 0
+        kd = kq_pool[layer_ids, src].astype(jnp.float32) \
+            * k_scale[layer_ids, src][:, None, None, None]
+        vd = vq_pool[layer_ids, src].astype(jnp.float32) \
+            * v_scale[layer_ids, src][:, None, None, None]
+        ksrc = jnp.where(isq, kd.astype(k_pool.dtype),
+                         k_pool[layer_ids, src])
+        vsrc = jnp.where(isq, vd.astype(v_pool.dtype),
+                         v_pool[layer_ids, src])
+        return (k_pool.at[layer_ids, dst].set(ksrc),
+                v_pool.at[layer_ids, dst].set(vsrc))
+
+    def fork_paged_quant(self, k_pool, v_pool, kq_pool, vq_pool, k_scale,
+                         v_scale, layer_ids, src, dst, srcq,
+                         pool_sharding=None):
+        """`fork_paged` generalized over mixed-precision sources: rows with
+        ``srcq`` set RE-MATERIALIZE full precision from the int8 shadow pool
+        (dequant with the source page's scale) instead of copying the stale
+        fp bytes.  Two shapes ride the same batch:
+
+        * CoW fork of a quantized donor page (src != dst): the writer's
+          private copy comes up fp, the donor's int8 page is untouched;
+        * dequant-in-place (src == dst): a sole holder about to write
+          mid-page inflates its own page back to fp — 0 new pages, the
+          caller clears the allocator's precision bit.
+
+        Pad rows point src == dst == trash with srcq = 0.  Censused under
+        the "fork" key (the quant signature differs from the all-fp fork's,
+        so the census still counts each bucket once)."""
+        key = self._mesh_sig(pool_sharding)
+        jit_fn = self._fork_quant_jits.get(key)
+        if jit_fn is None:
+            kw = dict(donate_argnums=(0, 1))
+            if pool_sharding is not None:
+                kw["out_shardings"] = (pool_sharding, pool_sharding)
+            jit_fn = self._fork_quant_jits[key] = jax.jit(
+                self._fork_paged_quant_impl, **kw)
+        args = (k_pool, v_pool, kq_pool, vq_pool, k_scale, v_scale,
+                layer_ids, src, dst, srcq)
+        self._compile_keys["fork"].add(
+            (key,) + self._shape_sig(args, "fork_quant"))
+        return jit_fn(*args)
+
+    @staticmethod
+    def _compress_paged_impl(k_pool, v_pool, kq_pool, vq_pool, k_scale,
+                             v_scale, layer_ids, pages):
+        from repro.kernels.quant import quantize_int8
+        kq, ks = quantize_int8(k_pool[layer_ids, pages], axis=(1, 2, 3))
+        vq, vs = quantize_int8(v_pool[layer_ids, pages], axis=(1, 2, 3))
+        return (kq_pool.at[layer_ids, pages].set(kq),
+                vq_pool.at[layer_ids, pages].set(vq),
+                k_scale.at[layer_ids, pages].set(ks),
+                v_scale.at[layer_ids, pages].set(vs))
+
+    def compress_paged(self, k_pool, v_pool, kq_pool, vq_pool, k_scale,
+                       v_scale, layer_ids, pages, pool_sharding=None):
+        """Quantize a batch of cold pages into the int8 shadow pools: one
+        fused donating dispatch per (row-count) bucket writes
+        ``kq/vq_pool[l, p]`` and the per-page fp32 scales for every
+        (layer, page) row.  The fp pools are read-only (their bytes become
+        dead capacity the moment the allocator's precision bit flips); the
+        shadow pools and scale arrays are donated.  Pad rows must point at
+        (layer 0, trash page).  Censused under the "compress" key.
+
+        layer_ids/pages: (R,) int32.  Returns (kq_pool, vq_pool, k_scale,
+        v_scale)."""
+        key = self._mesh_sig(pool_sharding)
+        jit_fn = self._compress_jits.get(key)
+        if jit_fn is None:
+            kw = dict(donate_argnums=(2, 3, 4, 5))
+            if pool_sharding is not None:
+                repl = jax.sharding.NamedSharding(
+                    pool_sharding.mesh, jax.sharding.PartitionSpec())
+                kw["out_shardings"] = (pool_sharding, pool_sharding,
+                                       repl, repl)
+            jit_fn = self._compress_jits[key] = jax.jit(
+                self._compress_paged_impl, **kw)
+        args = (k_pool, v_pool, kq_pool, vq_pool, k_scale, v_scale,
+                layer_ids, pages)
+        self._compile_keys["compress"].add(
+            (key,) + self._shape_sig(args, "compress"))
         return jit_fn(*args)
 
     @staticmethod

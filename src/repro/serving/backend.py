@@ -174,6 +174,14 @@ class Backend:
         return 0
 
     # -- preemption / lifecycle --------------------------------------------
+    def quantize_session(self, sid: str) -> int:
+        """Demote a session's full KV pages into the quantized-in-HBM tier
+        (INT8 shadow pages + per-page scales, served with in-kernel
+        dequant); returns the HBM ledger bytes freed.  0 = nothing to
+        compress, or the backend has no quantized tier (sim sessions are
+        repriced by the NodeManager directly)."""
+        return 0
+
     def swap_out(self, sid: str, n_tokens: int) -> None:
         pass
 
@@ -298,6 +306,19 @@ class RealBackend(Backend):
     it off; with it off the only per-step host transfer is the argmax token
     ids.
 
+    QUANTIZED-IN-HBM TIER (``hbm_pages=``): between fp-HBM and the host
+    tier sits an INT8 capacity tier that never leaves the device — per-page
+    symmetric quantization into lazily-allocated shadow pools (one fp32
+    scale per (layer, page, side)), served directly with IN-KERNEL dequant
+    (no re-inflation copy).  `quantize_session` compresses a session's full
+    pages in lockstep across layers with one bucketed donating dispatch;
+    the allocators carry the per-page precision bit, the byte ledger prices
+    int8 pages exactly (elements + scales), and every tier payload leaving
+    the device re-inflates to fp first, so the host/disk/export formats are
+    precision-agnostic.  Pass ``hbm_pages < n_pages`` to give the node more
+    physical page slots than its fp byte budget — the headroom quantized
+    pages make usable.
+
     TENSOR-PARALLEL NODE (``mesh=``): pass a 1-D ``("model",)`` mesh
     (`launch.mesh.make_serving_mesh`) and one node becomes tp devices
     serving one replica.  The stacked pools get the `ShardingPlan.pool_spec`
@@ -318,7 +339,8 @@ class RealBackend(Backend):
     def __init__(self, cfg, model, params, *, n_pages: int = 64,
                  page_size: int = 8, kernel_mode: str = "auto",
                  spool_dir: Optional[str] = None, mgr=None,
-                 trace_logits: bool = True, mesh=None):
+                 trace_logits: bool = True, mesh=None,
+                 hbm_pages: Optional[int] = None):
         import jax
         import jax.numpy as jnp
 
@@ -327,6 +349,14 @@ class RealBackend(Backend):
         self.model = model
         self.params = params
         self.n_pages = n_pages
+        # byte budget, in FULL-PRECISION page units: admission and the store
+        # are budgeted for `hbm_pages` worth of fp KV while the pools carry
+        # `n_pages` physical page slots.  n_pages > hbm_pages is the
+        # quantized tier's headroom — an int8 page costs ~1/itemsize of a
+        # budget page, so the same byte budget holds ~2x the sessions once
+        # cold pages compress.  Default (None) keeps both equal: a node
+        # that never quantizes is unchanged.
+        self.hbm_pages = n_pages if hbm_pages is None else hbm_pages
         self.page_size = page_size
         self.mesh = mesh
         self.tp = 1
@@ -339,6 +369,18 @@ class RealBackend(Backend):
         shape = (L, n_pages + 1, page_size, Hkv, D)
         self.k_pool = jnp.zeros(shape, self.dtype)
         self.v_pool = jnp.zeros(shape, self.dtype)
+        # quantized-in-HBM tier: int8 shadow pools + per-(layer, page)
+        # fp32 scales, lazily allocated at the first compress (a node that
+        # never quantizes never pays for them).  Once active, every
+        # step_paged threads the quant tuple so the jit signature stays
+        # stable; the precision FLAGS are rebuilt host-side from the
+        # allocators' bits at every dispatch and never persisted on device
+        # (page reuse can therefore never serve a stale flag)
+        self.kq_pool = None
+        self.vq_pool = None
+        self.k_scale = None
+        self.v_scale = None
+        self._quant_active = False
         if mesh is not None:
             from repro.distributed.sharding import ShardingPlan
             plan = ShardingPlan(cfg, mesh)
@@ -365,7 +407,9 @@ class RealBackend(Backend):
         self.stats = dict(prefills=0, decode_steps=0, swaps_out=0,
                           swaps_in=0, layer_evictions=0, layer_promotions=0,
                           migrations_in=0, copied_bytes=0.0, disk_writes=0,
-                          prefix_hits=0, shared_tokens=0, cow_forks=0)
+                          prefix_hits=0, shared_tokens=0, cow_forks=0,
+                          quantized_pages=0, quant_dispatches=0,
+                          dequant_forks=0, admit_quantized=0)
         self.logit_trace: List[Tuple[str, np.ndarray]] = []
 
     def compile_counts(self) -> Dict[str, int]:
@@ -409,12 +453,21 @@ class RealBackend(Backend):
         return self.page_size * 2 * c.n_kv_heads * c.d_head \
             * self.dtype.itemsize
 
+    @property
+    def _layer_page_bytes_q(self) -> int:
+        """One page's ledger price once quantized: int8 elements plus the
+        two per-page fp32 scales (k and v) — exact, not a ratio."""
+        c = self.cfg
+        return self.page_size * 2 * c.n_kv_heads * c.d_head + 2 * 4
+
     def session_kv_bytes(self, tokens: int) -> float:
+        # priced FULL PRECISION: new KV is always written fp (quantization
+        # is a later demotion), so admission must reserve the fp bytes
         pages = self.alloc[0].pages_for(max(int(tokens), 0))
         return pages * self.page_size * self._token_bytes
 
     def hbm_kv_budget(self) -> float:
-        return self.n_pages * self.page_size * self._token_bytes
+        return self.hbm_pages * self.page_size * self._token_bytes
 
     def pool_device_bytes(self) -> int:
         """Physical bytes of ONE device's shard of the stacked pools (both
@@ -426,15 +479,25 @@ class RealBackend(Backend):
 
     def kv_in_use(self, running) -> float:
         # used_pages includes leased pages: an in-flight swap-out still
-        # physically occupies its source pages until the copy lands
-        used = max(a.used_pages for a in self.alloc)
-        return used * self.page_size * self._token_bytes
+        # physically occupies its source pages until the copy lands.
+        # Quantized pages are priced at the int8 tier — the capacity a
+        # compress freed is real admission headroom against hbm_kv_budget
+        return float(max(
+            (a.used_pages - len(a.quantized)) * self._layer_page_bytes
+            + len(a.quantized) * self._layer_page_bytes_q
+            for a in self.alloc)) * self.cfg.n_layers
 
     def resident_kv_bytes(self, sid: str) -> float:
-        # min across layers: never discount pages an evicted layer lacks
-        pages = min((len(a.seqs[sid].pages) if sid in a.seqs else 0)
-                    for a in self.alloc)
-        return pages * self.page_size * self._token_bytes
+        # min across layers: never discount pages an evicted layer lacks;
+        # quantized pages discount at their int8 price only
+        def _layer(a: PagedAllocator) -> int:
+            s = a.seqs.get(sid)
+            if s is None:
+                return 0
+            nq = sum(1 for p in s.pages if p in a.quantized)
+            return (len(s.pages) - nq) * self._layer_page_bytes \
+                + nq * self._layer_page_bytes_q
+        return float(min(_layer(a) for a in self.alloc)) * self.cfg.n_layers
 
     def session_tokens(self, sid: str) -> int:
         """Sequence length incl. the pending token (what the next turn's
@@ -443,6 +506,142 @@ class RealBackend(Backend):
         if st is None:
             return 0
         return st.n_kv + (1 if st.last_token is not None else 0)
+
+    # -- quantized-in-HBM tier ----------------------------------------------
+
+    def _ensure_quant_pools(self) -> None:
+        """Lazily materialize the int8 shadow pools and per-page fp32 scale
+        arrays.  On a mesh the shadow pools shard like the fp pools (same
+        rank, same partitioned dims); scales are tiny and stay replicated
+        (the kernel reads them through scalar prefetch)."""
+        if self._quant_active:
+            return
+        import jax
+        import jax.numpy as jnp
+        c = self.cfg
+        shape = (c.n_layers, self.n_pages + 1, self.page_size,
+                 c.n_kv_heads, c.d_head)
+        self.kq_pool = jnp.zeros(shape, jnp.int8)
+        self.vq_pool = jnp.zeros(shape, jnp.int8)
+        self.k_scale = jnp.zeros(shape[:2], jnp.float32)
+        self.v_scale = jnp.zeros(shape[:2], jnp.float32)
+        if self.mesh is not None:
+            self.kq_pool = jax.device_put(self.kq_pool, self._pool_sharding)
+            self.vq_pool = jax.device_put(self.vq_pool, self._pool_sharding)
+        self._quant_active = True
+
+    def _quant_flags(self):
+        """(L, P+1) int32 precision bits, rebuilt from the allocators at
+        every dispatch — never persisted on device, so page reuse can never
+        serve a stale flag.  The trash page is never quantized."""
+        import jax.numpy as jnp
+        flags = np.zeros((self.cfg.n_layers, self.n_pages + 1), np.int32)
+        for l, a in enumerate(self.alloc):
+            if a.quantized:
+                flags[l, list(a.quantized)] = 1
+        return jnp.asarray(flags)
+
+    def _quant_args(self):
+        """The optional mixed-precision tuple threaded to `step_paged`.
+        None until the first compress: the all-fp jit signature (and its
+        census entries) stays bit-identical to a node that never
+        quantizes."""
+        if not self._quant_active:
+            return None
+        return (self.kq_pool, self.vq_pool, self.k_scale, self.v_scale,
+                self._quant_flags())
+
+    def quantize_session(self, sid: str) -> int:
+        """Compress the session's FULL pages (never the partial tail —
+        writes land there) into the int8 shadow pools: ONE bucketed
+        donating `compress_paged` dispatch quantizes every not-yet-
+        quantized (layer, page) in LOCKSTEP across layers, the allocators'
+        precision bits flip, and the store entry reprices to the int8
+        geometry.  The fp bytes the flags retire are the freed capacity.
+        Returns the HBM ledger bytes freed (0: nothing to compress, or a
+        layer is evicted and lockstep is impossible)."""
+        import jax.numpy as jnp
+        st = self.seqs.get(sid)
+        if st is None:
+            return 0
+        full = st.n_kv // self.page_size
+        if full <= 0:
+            return 0
+        rows: List[Tuple[int, int]] = []
+        for l, a in enumerate(self.alloc):
+            s = a.seqs.get(sid)
+            if s is None or len(s.pages) < full:
+                return 0
+            rows.extend((l, p) for p in s.pages[:full]
+                        if not a.is_quantized(p))
+        if not rows:
+            return 0
+        self._ensure_quant_pools()
+        Rb = _bucket(len(rows))
+        r_li = np.zeros((Rb,), np.int32)                # pad rows point at
+        r_pg = np.full((Rb,), self.n_pages, np.int32)   # (layer 0, trash)
+        for i, (l, p) in enumerate(rows):
+            r_li[i], r_pg[i] = l, p
+        self.kq_pool, self.vq_pool, self.k_scale, self.v_scale = \
+            self.model.compress_paged(
+                self.k_pool, self.v_pool, self.kq_pool, self.vq_pool,
+                self.k_scale, self.v_scale, jnp.asarray(r_li),
+                jnp.asarray(r_pg), pool_sharding=self._pool_sharding)
+        for l, p in rows:
+            self.alloc[l].set_quantized(p)
+        self.stats["quantized_pages"] += len(rows)
+        self.stats["quant_dispatches"] += 1
+        self._reprice_store(sid)
+        return len(rows) * (self._layer_page_bytes
+                            - self._layer_page_bytes_q)
+
+    def _dequantize_session(self, sid: str) -> None:
+        """Re-inflate every quantized page of ``sid`` IN PLACE (dequant
+        write-back rows, src == dst) and clear its precision bits.  Called
+        when layer-granular movement is about to break the lockstep the
+        int8 ledger price assumes; the write-back is lossy-faithful — the
+        fp pool gets the dequantized values, not the pre-compress bytes."""
+        import jax.numpy as jnp
+        rows: List[Tuple[int, int]] = []
+        for l, a in enumerate(self.alloc):
+            for p in a.quantized_pages_of(sid):
+                rows.append((l, p))
+                a.set_quantized(p, False)
+                self.stats["dequant_forks"] += 1
+        if not rows:
+            return
+        Rb = _bucket(len(rows))
+        f_li = np.zeros((Rb,), np.int32)
+        f_pg = np.full((Rb,), self.n_pages, np.int32)
+        f_q = np.zeros((Rb,), np.int32)
+        for i, (l, p) in enumerate(rows):
+            f_li[i], f_pg[i], f_q[i] = l, p, 1
+        self.k_pool, self.v_pool = self.model.fork_paged_quant(
+            self.k_pool, self.v_pool, self.kq_pool, self.vq_pool,
+            self.k_scale, self.v_scale, jnp.asarray(f_li),
+            jnp.asarray(f_pg), jnp.asarray(f_pg), jnp.asarray(f_q),
+            pool_sharding=self._pool_sharding)
+
+    def _session_bpl(self, sid: str) -> Tuple[int, int]:
+        """Store-entry price of this session's PRIVATE pages: (bytes per
+        layer, quantized token count).  Shared pages are charged to their
+        first owner (see `finish`); quantized pages at the int8 price."""
+        a0 = self.alloc[0]
+        s = a0.seqs.get(sid)
+        if s is None:
+            return 0, 0
+        private = [p for p in s.pages if a0.refcount_of(p) == 1]
+        nq = sum(1 for p in private if a0.is_quantized(p))
+        bpl = (len(private) - nq) * self._layer_page_bytes \
+            + nq * self._layer_page_bytes_q
+        return bpl, nq * self.page_size
+
+    def _reprice_store(self, sid: str) -> None:
+        e = self._store_entry(sid)
+        if e is None:
+            return
+        bpl, qtok = self._session_bpl(sid)
+        self.mgr.store.reprice(sid, bpl, qtok)
 
     # -- cross-session prefix sharing (copy-on-write) -----------------------
 
@@ -553,9 +752,28 @@ class RealBackend(Backend):
             li = jnp.asarray(ls, jnp.int32)[:, None]
             pi = jnp.asarray(np.stack(
                 [self.alloc[l].seqs[sid].pages for l in ls]), jnp.int32)
-            k = self.k_pool[li, pi].reshape(
+            k = self.k_pool[li, pi]
+            v = self.v_pool[li, pi]
+            if self._quant_active:
+                qf = np.zeros((len(ls), npg), bool)
+                for i, l in enumerate(ls):
+                    qf[i] = [p in self.alloc[l].quantized
+                             for p in self.alloc[l].seqs[sid].pages]
+                if qf.any():
+                    # tier payloads are ALWAYS full precision: quantized
+                    # pages re-inflate on the way out (quantize -> swap
+                    # demotion), so host/spool/export formats — and every
+                    # swap-in — never know the int8 tier exists
+                    isq = jnp.asarray(qf)[..., None, None, None]
+                    ks = self.k_scale[li, pi][..., None, None, None]
+                    vs = self.v_scale[li, pi][..., None, None, None]
+                    k = jnp.where(isq, (self.kq_pool[li, pi].astype(
+                        jnp.float32) * ks).astype(self.dtype), k)
+                    v = jnp.where(isq, (self.vq_pool[li, pi].astype(
+                        jnp.float32) * vs).astype(self.dtype), v)
+            k = k.reshape(
                 len(ls), npg * self.page_size, c.n_kv_heads, c.d_head)[:, :n]
-            v = self.v_pool[li, pi].reshape(
+            v = v.reshape(
                 len(ls), npg * self.page_size, c.n_kv_heads, c.d_head)[:, :n]
             k.copy_to_host_async()
             v.copy_to_host_async()
@@ -758,6 +976,14 @@ class RealBackend(Backend):
                 self.host.pop((sid, l), None)
                 self.stats["swaps_in"] += 1
             _store_to_hbm(payloads)
+            # admission under pressure: a swap-in landing on a nearly full
+            # node comes back already compressed — the alternative is
+            # immediately re-evicting someone else.  (The compress dispatch
+            # reads the scatter's output pools: data dependency orders it.)
+            if min(len(a.free_list) for a in self.alloc) \
+                    < max(1, self.n_pages // 8):
+                if self.quantize_session(sid):
+                    self.stats["admit_quantized"] += 1
 
     # -- engine iteration ---------------------------------------------------
 
@@ -893,8 +1119,12 @@ class RealBackend(Backend):
         # gets a private copy — allocator remaps the block-table entry, one
         # bucketed donating device dispatch copies the contents.  Writes at
         # a page boundary never fork (the new page is freshly allocated and
-        # private by construction).
-        forks: List[Tuple[int, int, int]] = []       # (layer, src, dst)
+        # private by construction).  Quantized sources generalize the same
+        # dispatch: a CoW fork of an int8 donor page RE-MATERIALIZES fp
+        # into the writer's private copy, and a SOLE holder writing
+        # mid-page into its own quantized page dequant-writes-back in place
+        # (src == dst, 0 new pages) with the precision bit cleared.
+        forks: List[Tuple[int, int, int, int]] = []  # (layer, src, dst, srcq)
         for sid in sids:
             st = self.seqs[sid]
             if st.n_kv % self.page_size == 0:
@@ -902,22 +1132,37 @@ class RealBackend(Backend):
             pi = st.n_kv // self.page_size
             for l, a in enumerate(self.alloc):
                 s = a.seqs[sid]
-                if pi < len(s.pages):
-                    r = a.fork_cow(sid, pi)
-                    if r is not None:
-                        forks.append((l, r[0], r[1]))
+                if pi >= len(s.pages):
+                    continue
+                page = s.pages[pi]
+                r = a.fork_cow(sid, pi)
+                if r is not None:
+                    forks.append((l, r[0], r[1],
+                                  int(a.is_quantized(r[0]))))
+                    self.stats["cow_forks"] += 1
+                elif a.is_quantized(page):
+                    forks.append((l, page, page, 1))
+                    a.set_quantized(page, False)
+                    self.stats["dequant_forks"] += 1
         if forks:
             Fb = _bucket(len(forks))
             f_li = np.zeros((Fb,), np.int32)
             f_src = np.full((Fb,), self.n_pages, np.int32)  # pad: trash->trash
             f_dst = np.full((Fb,), self.n_pages, np.int32)
-            for i, (l, src, dst) in enumerate(forks):
-                f_li[i], f_src[i], f_dst[i] = l, src, dst
-            self.k_pool, self.v_pool = self.model.fork_paged(
-                self.k_pool, self.v_pool, jnp.asarray(f_li),
-                jnp.asarray(f_src), jnp.asarray(f_dst),
-                pool_sharding=self._pool_sharding)
-            self.stats["cow_forks"] += len(forks)
+            f_q = np.zeros((Fb,), np.int32)
+            for i, (l, src, dst, srcq) in enumerate(forks):
+                f_li[i], f_src[i], f_dst[i], f_q[i] = l, src, dst, srcq
+            if f_q.any():
+                self.k_pool, self.v_pool = self.model.fork_paged_quant(
+                    self.k_pool, self.v_pool, self.kq_pool, self.vq_pool,
+                    self.k_scale, self.v_scale, jnp.asarray(f_li),
+                    jnp.asarray(f_src), jnp.asarray(f_dst),
+                    jnp.asarray(f_q), pool_sharding=self._pool_sharding)
+            else:
+                self.k_pool, self.v_pool = self.model.fork_paged(
+                    self.k_pool, self.v_pool, jnp.asarray(f_li),
+                    jnp.asarray(f_src), jnp.asarray(f_dst),
+                    pool_sharding=self._pool_sharding)
         for sid, ids in zip(sids, ids_by_lane):
             self._extend_all(sid, len(ids))
 
@@ -958,7 +1203,7 @@ class RealBackend(Backend):
         toks_dev, logits, self.k_pool, self.v_pool = self.model.step_paged(
             self.params, ids_p, self.k_pool, self.v_pool, tables,
             jnp.asarray(qoff), jnp.asarray(ctx), jnp.asarray(last), pg, off,
-            kernel_mode=self.kernel_mode,
+            quant=self._quant_args(), kernel_mode=self.kernel_mode,
             pool_sharding=self._pool_sharding)
         tok_np = np.asarray(toks_dev[:B])        # token ids only — no full-
         lg_np = None                             # logits sync unless tracing
@@ -1004,6 +1249,18 @@ class RealBackend(Backend):
         for kind in (IN, OUT):
             if self.transfers.pending_for(sid, kind):
                 self.transfers.fence(sid=sid, kind=kind)
+        # host payloads are re-inflated to full precision by the gather —
+        # reprice the store entry to fp geometry BEFORE its pages lease out
+        # (the precision bits die with the pages when the copy lands)
+        e = self._store_entry(sid)
+        if e is not None and e.quant_tokens:
+            a0 = self.alloc[0]
+            s0 = a0.seqs.get(sid)
+            if s0 is not None:
+                private = sum(1 for p in s0.pages
+                              if a0.refcount_of(p) == 1)
+                self.mgr.store.reprice(
+                    sid, private * self._layer_page_bytes, 0)
         resident = [l for l in range(self.cfg.n_layers)
                     if sid in self.alloc[l].seqs]
         self._launch_swap_to_host(sid, resident)
@@ -1050,10 +1307,11 @@ class RealBackend(Backend):
         private = sum(1 for p in pages if a0.refcount_of(p) == 1)
         shared_tok = min((len(pages) - private) * self.page_size,
                          st.n_kv if st is not None else 0)
-        bpl = private * self._layer_page_bytes
+        bpl, quant_tok = self._session_bpl(sid)
         self.mgr.mark_resident(sid, self.session_tokens(sid), bpl,
                                priority=req.priority,
-                               shared_tokens=shared_tok)
+                               shared_tokens=shared_tok,
+                               quant_tokens=quant_tok)
         e = self._store_entry(sid)
         if e is not None:
             e.pinned = False         # idle again: migratable between turns
@@ -1067,6 +1325,13 @@ class RealBackend(Backend):
         a = self.alloc[layer]
         if sid not in a.seqs or sid not in self.seqs:
             return
+        # layer-granular movement breaks the lockstep the int8 ledger price
+        # assumes: dequant-write-back the whole session first (clears its
+        # bits) and reprice to fp, THEN evict the one layer
+        if self._quant_active and any(
+                x.quantized_pages_of(sid) for x in self.alloc):
+            self._dequantize_session(sid)
+            self._reprice_store(sid)
         self._launch_swap_to_host(sid, [layer])
         self.stats["layer_evictions"] += 1
 
@@ -1207,6 +1472,10 @@ class RealBackend(Backend):
                       for _ in range(self.cfg.n_layers)]
         self.host.clear()
         self.seqs.clear()
+        # the int8 shadow tier lives in the same HBM: it dies too
+        self.kq_pool = self.vq_pool = None
+        self.k_scale = self.v_scale = None
+        self._quant_active = False
 
     def spool_exists(self, sid: str) -> bool:
         return self.spool is not None and (self.spool / f"{sid}.npz").exists()
@@ -1244,6 +1513,7 @@ def make_backend(cfg, model, params, **kw):
     if cfg.family in ("mamba2", "xlstm", "hybrid"):
         from repro.serving.state_backend import StateBackend
         kw.pop("mesh", None)         # TP serving is transformer-only so far
+        kw.pop("hbm_pages", None)    # as is the quantized page tier
         return StateBackend(cfg, model, params, **kw)
     kw.pop("n_slots", None)          # slot pools are a recurrent concept
     return RealBackend(cfg, model, params, **kw)

@@ -32,12 +32,18 @@ class HardwareSpec:
 
 
 class CostModel:
-    def __init__(self, cfg: ModelConfig, hw: HardwareSpec = HardwareSpec()):
+    def __init__(self, cfg: ModelConfig, hw: HardwareSpec = HardwareSpec(),
+                 kv_dtype_bytes: int = 2, quant_dtype_bytes: int = 1):
         self.cfg = cfg
         self.hw = hw
         c = cfg
         self.n_params = None    # lazy (needs model)
-        dtype_bytes = 2
+        # KV element width is a parameter (not hardcoded) so the quantized
+        # tier's geometry, the roofline table and the serving budgets all
+        # read from one source of truth; 2 = the bf16/fp16 serving default
+        self.kv_dtype_bytes = kv_dtype_bytes
+        self.quant_dtype_bytes = quant_dtype_bytes
+        dtype_bytes = kv_dtype_bytes
         if c.family in ("hybrid", "mamba2"):
             # mamba2 was previously missing here and fell through to the
             # transformer branch — pure-SSM sessions were priced as linear
@@ -99,9 +105,25 @@ class CostModel:
         self._ensure_params()
         return self.n_params * 2
 
-    def session_kv_bytes(self, tokens: int) -> float:
+    @property
+    def kv_bytes_token_quant(self) -> float:
+        """Per-token KV bytes once a page sits in the INT8 tier: element
+        width shrinks to quant_dtype_bytes; the per-page fp32 scale pair
+        amortizes to well under a byte per token and is charged in the
+        backend's exact page ledger, not here."""
+        if self.kv_bytes_token == 0:
+            return 0.0
+        return self.kv_bytes_token * self.quant_dtype_bytes \
+            / self.kv_dtype_bytes
+
+    def session_kv_bytes(self, tokens: int, quant_tokens: int = 0) -> float:
+        """Resident bytes of a session with ``tokens`` of context, of which
+        ``quant_tokens`` sit in the quantized-in-HBM tier."""
+        window = min(tokens, self.kv_window)
+        q = min(quant_tokens, window)
         return (self.fixed_state_bytes
-                + min(tokens, self.kv_window) * self.kv_bytes_token)
+                + (window - q) * self.kv_bytes_token
+                + q * self.kv_bytes_token_quant)
 
     def hbm_kv_budget(self) -> float:
         hw = self.hw
@@ -170,6 +192,52 @@ class CostModel:
               "disk_r": hw.disk_bw, "disk_w": hw.disk_bw,
               "peer": hw.ici_bw, "xpod": hw.dcn_bw}[kind]
         return nbytes / bw + 0.0002          # small fixed RPC overhead
+
+    # -- quantized-in-HBM tier ---------------------------------------------------------
+
+    def compress_time(self, tokens: int) -> float:
+        """In-place page quantization cost: read the fp KV once, write the
+        int8 shadow — pure HBM traffic, no PCIe.  Tiny next to any tier
+        transfer of the same span (that asymmetry is the whole policy)."""
+        fp = self.session_kv_bytes(tokens) - self.fixed_state_bytes
+        q = fp * self.quant_dtype_bytes / max(self.kv_dtype_bytes, 1)
+        hw = self.hw
+        return (fp + q) / (hw.chips_per_replica * hw.hbm_bw
+                           * hw.mfu_decode_mem)
+
+    def dequant_time(self, tokens: int) -> float:
+        """In-kernel dequant overhead when serving quantized pages: the
+        int8 read replaces the fp read (it is SMALLER), so the marginal
+        cost is just the scale-multiply — charge the int8 bytes once."""
+        fp = self.session_kv_bytes(tokens) - self.fixed_state_bytes
+        q = fp * self.quant_dtype_bytes / max(self.kv_dtype_bytes, 1)
+        hw = self.hw
+        return q / (hw.chips_per_replica * hw.hbm_bw * hw.mfu_decode_mem)
+
+    def prefer_quantize(self, n_tokens: int,
+                        reuse_distance: Optional[float],
+                        slack: float = 2000.0) -> bool:
+        """Quantize-vs-swap decision under HBM pressure: quantizing keeps
+        the session serving-warm at ~2x density for one cheap HBM round
+        trip; swapping frees ALL its bytes but pays a d2h copy now and an
+        h2d copy (or its advisory-hidden residual) at reuse.  Prefer
+        quantize when the predicted reuse lands within ``slack`` swap round
+        trips — the round trip is what quantizing saves, and holding the
+        residual int8 bytes meanwhile is cheap (half the fp footprint), so
+        the horizon is a large multiple of it: at serving scale a 1-2k
+        token session's round trip is ~10-20 ms, putting the horizon at
+        ~20-40 s — enough to cover the ~11 s typing-time advisory leads of
+        the ShareGPT workload, which is exactly the reuse the advisory
+        protocol can see.  A session with no advisory (reuse_distance None
+        = no idea when it returns) swaps: the far tiers exist for exactly
+        that case, and `evict_hbm_to_fit` still reclaims quantized
+        sessions when compression alone cannot cover the pressure."""
+        if reuse_distance is None:
+            return False
+        nbytes = self.session_kv_bytes(n_tokens)
+        round_trip = 2 * self.transfer_time(nbytes, "d2h") \
+            + self.compress_time(n_tokens)
+        return reuse_distance <= slack * round_trip
 
     def layerwise_stall(self, n_layers_to_fetch: int, bytes_per_layer: float,
                         kind: str, step_time: float, n_layers: int) -> float:

@@ -71,8 +71,15 @@ class PagedAllocator:
         # A COUNT, not a set — two transfers (e.g. two sharers swapping
         # out) may hold the same shared page simultaneously
         self.leased: Dict[int, int] = {}
+        # pages whose live contents are the INT8 shadow pool (per-page
+        # precision bit of the quantized-in-HBM tier).  Purely physical —
+        # follows the page, not the sequence: shared pages are quantized
+        # for every holder at once, and the bit clears whenever the page
+        # re-enters the free list (a recycled page always starts fp)
+        self.quantized: set = set()
         self.stats = dict(allocs=0, frees=0, peak_used=0, leases=0,
-                          shared=0, cow_forks=0)
+                          shared=0, cow_forks=0, quantized=0,
+                          dequantized=0)
 
     # -- capacity ----------------------------------------------------------------
 
@@ -103,11 +110,37 @@ class PagedAllocator:
             return
         del self.refcount[page]
         if not self.leased.get(page):
+            self.quantized.discard(page)
             self.free_list.append(page)
             self.stats["frees"] += 1
 
     def refcount_of(self, page: int) -> int:
         return self.refcount.get(page, 0)
+
+    # -- quantized-in-HBM precision bit -------------------------------------------
+
+    def set_quantized(self, page: int, flag: bool = True) -> None:
+        """Flip a held page's precision bit.  The device-side contents move
+        (compress_paged / fork_paged_quant) are the caller's job; this is
+        the bookkeeping the kernel's per-page dequant flags are rebuilt
+        from on every dispatch."""
+        assert self.refcount.get(page, 0) > 0 or self.leased.get(page, 0) > 0, \
+            f"quantize bit on unheld page {page}"
+        if flag and page not in self.quantized:
+            self.quantized.add(page)
+            self.stats["quantized"] += 1
+        elif not flag and page in self.quantized:
+            self.quantized.discard(page)
+            self.stats["dequantized"] += 1
+
+    def is_quantized(self, page: int) -> bool:
+        return page in self.quantized
+
+    def quantized_pages_of(self, seq_id: str) -> List[int]:
+        s = self.seqs.get(seq_id)
+        if s is None:
+            return []
+        return [p for p in s.pages if p in self.quantized]
 
     # -- alloc / extend / free -----------------------------------------------------
 
@@ -178,6 +211,7 @@ class PagedAllocator:
                 continue
             del self.leased[p]
             if not self.refcount.get(p):
+                self.quantized.discard(p)
                 self.free_list.append(p)
                 self.stats["frees"] += 1
 
@@ -300,6 +334,10 @@ class PagedAllocator:
         assert len(free) == len(self.free_list), "duplicate free page"
         assert held.isdisjoint(free), "freed-in-use page"
         assert len(held) + len(free) == self.n_pages, "leak"
+        # the precision bit follows held pages only: a free page is always
+        # full precision (recycled pages must never read stale int8)
+        assert self.quantized <= held, \
+            f"quantized bit on free pages: {self.quantized - held}"
 
 
 class StateAllocator:

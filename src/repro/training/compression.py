@@ -15,11 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-
-def _quantize(g):
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+from repro.kernels.quant import quantize_int8 as _quantize
 
 
 def compressed_psum(grads, mesh, axis: str = "data"):

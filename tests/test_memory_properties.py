@@ -19,7 +19,8 @@ from repro.serving.kv_cache import (OutOfPages, OutOfSlots, PagedAllocator,
 
 ALLOC_OP = st.tuples(
     st.sampled_from(["alloc", "extend", "truncate", "free", "tables",
-                     "lease", "release", "share", "fork", "ref", "unref"]),
+                     "lease", "release", "share", "fork", "ref", "unref",
+                     "quant", "dequant"]),
     st.integers(0, 5),           # session index
     st.integers(0, 30),          # token count / page-pick argument
 )
@@ -73,6 +74,18 @@ def test_allocator_state_machine(ops):
                     old, new = got
                     assert before[pi] == old and s.pages[pi] == new
                     assert a.refcount_of(new) == 1
+                    # a fresh CoW copy always starts full precision (the
+                    # backend dequantizes into it), whatever the source was
+                    assert not a.is_quantized(new)
+            elif op == "quant" and sid in a.seqs and a.seqs[sid].pages:
+                # the quantized-tier precision bit: any HELD page may carry
+                # it (shared pages included — the bit is per-page, not
+                # per-sequence)
+                s = a.seqs[sid]
+                a.set_quantized(s.pages[tok % len(s.pages)])
+            elif op == "dequant" and a.quantized:
+                a.set_quantized(sorted(a.quantized)[tok % len(a.quantized)],
+                                False)
             elif op == "ref" and sid in a.seqs and a.seqs[sid].pages:
                 pages = list(a.seqs[sid].pages)
                 a.ref(pages)                      # pin outlives the sequence
@@ -100,6 +113,10 @@ def test_allocator_state_machine(ops):
         for p in pins:
             held.update(p)
         assert a.used_pages == len(held)
+        # precision bits live only on held pages: freeing, truncating or
+        # releasing a page must strip its bit (a free page is always fp)
+        assert a.quantized <= held
+        assert not (a.quantized & set(a.free_list))
         for sid2, n in model.items():
             s = a.seqs[sid2]
             assert s.n_tokens == n
@@ -212,7 +229,7 @@ def test_state_allocator_lease_free_release_interleave():
 
 STORE_OP = st.tuples(
     st.sampled_from(["admit", "grow", "move", "evict", "persist", "drop",
-                     "promote"]),
+                     "promote", "reprice"]),
     st.integers(0, 5),           # session index
     st.integers(1, 40),          # bytes-per-layer / bytes-needed argument
     st.integers(1, 6),           # layer count / layer index argument
@@ -243,6 +260,16 @@ def test_tiered_store_state_machine(ops):
         elif op == "promote" and e is not None:
             for l, _src in s.promotion_plan(sid, max_bytes=nbytes * 5):
                 s.move_layer(sid, l, HBM)
+        elif op == "reprice" and e is not None:
+            # quantized-tier compress / re-inflate: same tokens, new bytes;
+            # the returned delta must be exactly the HBM-ledger movement
+            before = s.used[HBM]
+            old_bpl = e.bytes_per_layer
+            hbm_layers = sum(1 for t in e.tier if t == HBM)
+            delta = s.reprice(sid, nbytes, quant_tokens=min(nl, e.n_tokens))
+            assert delta == s.used[HBM] - before
+            assert delta == (nbytes - old_bpl) * hbm_layers
+            assert e.bytes_per_layer == nbytes
         s.check()
         # persistent copies are whole-session: on_disk implies disk bytes
         disk_persist = sum(e2.total_bytes for e2 in s.entries.values()
