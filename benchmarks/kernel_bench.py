@@ -527,6 +527,123 @@ def bench_interference(prompt_len: int = 4000, token_budget: int = 4,
     return out
 
 
+def bench_hetero(long_len: int = 200, decode_steps: int = 64,
+                 kernel_mode: str = None):
+    """Heterogeneous-skew mode: the page-walk-elimination observable.
+
+    One resumed long-context lane (``long_len`` tokens) decodes alongside
+    15 short lanes — SYMPHONY's signature multi-turn batch shape.  Before
+    page-walk elimination every short lane's attention was padded to the
+    long lane's table-width bucket, so one straggler repriced the whole
+    batch; with context-aware lane packing the step splits into two
+    sub-dispatches on the bucket lattice and each lane walks only its own
+    relevant pages.
+
+    Protocol: each scenario runs TWICE against the same model object — a
+    warm pass compiles every shape bucket, then a fresh backend re-serves
+    the identical scenario and only its decode-phase steps are timed
+    (``compiles`` records the census delta across the measured window;
+    the CI gate requires 0).  The headline is ``p99_ratio``: skewed-batch
+    decode p99 over a context-matched homogeneous baseline (the same 15
+    short lanes plus a 16th short lane instead of the long one) — SAME
+    percentile on both sides so shared-host scheduling noise cancels.
+    ``dma_pages``/``grid_pages`` come from the backend's page-walk
+    counters: the pages a lane actually fetches vs the grid walked, and
+    ``fused_grid_pages`` is what the pre-split dispatch would have walked
+    (every lane padded to the long lane's bucket).
+
+    Like the other serving modes this times the pure-jnp oracle on CPU
+    (``kernel_mode="ref"``) — interpret-mode Pallas would time the
+    emulator — and the compiled kernels on a TPU (``auto``)."""
+    from repro.configs import get_config
+    from repro.core.advisory import InferenceRequest
+    from repro.core.node_manager import NodeManager
+    from repro.models.registry import get_model
+    from repro.serving.backend import RealBackend, _bucket
+    from repro.serving.cost_model import CostModel, HardwareSpec
+    from repro.serving.engine import NodeEngine
+
+    if kernel_mode is None:
+        kernel_mode = "auto" if jax.default_backend() == "tpu" else "ref"
+    cfg = get_config("llama3-8b").reduced(dtype="float32")
+    model = get_model(cfg)                  # shared: jit cache == bucket set
+    params = model.init(jax.random.key(0))
+    page_size = 8
+    shorts = [6, 7, 8, 9, 10, 11, 12, 9, 8, 7, 6, 10, 11, 12, 9]
+    n_pages = (long_len + decode_steps) // page_size \
+        + 16 * (max(shorts) + decode_steps) // page_size + 32
+
+    def run(prompt_lens, seed=3):
+        """Serve the scenario to completion on a FRESH backend; time only
+        the decode phase (every lane past its prompt) and return latency
+        stats plus the page-walk counter deltas over that window."""
+        cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+        cost.set_param_count(model.param_count())
+        mgr = NodeManager(0, cfg, cost)
+        be = RealBackend(cfg, model, params, n_pages=n_pages,
+                         page_size=page_size, mgr=mgr, trace_logits=False,
+                         kernel_mode=kernel_mode)
+        eng = NodeEngine(0, cfg, cost, mgr, max_batch=16, backend=be,
+                         token_budget=512)
+        rng = np.random.default_rng(seed)
+        for i, n in enumerate(prompt_lens):
+            p = list(map(int, rng.integers(0, cfg.vocab, n)))
+            eng.submit(InferenceRequest(session_id=f"s{i}", prompt_tokens=n,
+                                        max_new_tokens=decode_steps,
+                                        prompt_ids=p))
+        now = 0.0
+        while eng.waiting or any(r.prompt_left > 0 for r in eng.running):
+            now += eng.step(now)            # prefill phase: not timed
+        snap = dict(be.stats)
+        census0 = be.compile_counts()["step"]
+        ts = []
+        while eng.running:
+            t0 = time.perf_counter()
+            now += eng.step(now)
+            ts.append(time.perf_counter() - t0)
+        ts = np.asarray(ts) * 1e3
+        d = {k: be.stats[k] - snap[k]
+             for k in ("dma_pages", "grid_pages", "sub_dispatches",
+                       "split_steps", "decode_steps")}
+        return dict(
+            steps=len(ts),
+            p50_ms=float(np.median(ts)),
+            p99_ms=float(np.percentile(ts, 99)),
+            compiles=int(be.compile_counts()["step"] - census0),
+            dma_pages_per_step=d["dma_pages"] / max(len(ts), 1),
+            **d)
+
+    skew_lens = [long_len] + shorts
+    homog_lens = shorts + [shorts[0]]       # context-matched short baseline
+    run(skew_lens)                          # warm: compiles skew buckets
+    run(homog_lens)                         # warm: compiles homog buckets
+    skew = run(skew_lens)
+    homog = run(homog_lens)
+
+    # what one fused dispatch per decode step would have walked: every lane
+    # padded to the long lane's table-width bucket
+    long_pages = -(-(long_len + decode_steps) // page_size)
+    fused_grid = skew["decode_steps"] * _bucket(16) * _bucket(long_pages)
+    out = dict(
+        long_len=long_len, shorts=shorts, decode_steps=decode_steps,
+        page_size=page_size, kernel_mode=kernel_mode,
+        skew=skew, homog=homog,
+        p99_ratio=skew["p99_ms"] / homog["p99_ms"],
+        p50_ratio=skew["p50_ms"] / homog["p50_ms"],
+        fused_grid_pages=int(fused_grid),
+        grid_over_fused=skew["grid_pages"] / max(fused_grid, 1),
+        measured_compiles=skew["compiles"] + homog["compiles"],
+    )
+    emit("step.hetero.p99_ratio", out["p99_ratio"],
+         f"skew_p99={skew['p99_ms']:.2f}ms homog_p99={homog['p99_ms']:.2f}ms "
+         f"dma_pages/step={skew['dma_pages_per_step']:.1f} "
+         f"grid_over_fused={out['grid_over_fused']:.2f} "
+         f"splits={skew['split_steps']} "
+         f"compiles_measured={out['measured_compiles']}")
+    save("BENCH_hetero", out)
+    return out
+
+
 def bench_sharing(n_sessions: int = 1000, shared_len: int = 64,
                   suffix_len: int = 3, gen: int = 2,
                   kernel_mode: str = None):
@@ -995,6 +1112,12 @@ if __name__ == "__main__":
                     help="run just the long-prompt interference mode")
     ap.add_argument("--overlap-only", action="store_true",
                     help="run just the async swap-in overlap mode")
+    ap.add_argument("--hetero-only", action="store_true",
+                    help="run just the heterogeneous-skew mode: 1 long + "
+                         "15 short decode lanes vs a context-matched "
+                         "homogeneous baseline, with the DMA'd-pages-per-"
+                         "step counter (emits the BENCH_hetero.json "
+                         "artifact)")
     ap.add_argument("--sharing-only", action="store_true",
                     help="run just the 1000-session prefix-sharing mode "
                          "(emits the BENCH_sharing.json artifact)")
@@ -1024,6 +1147,9 @@ if __name__ == "__main__":
     elif args.overlap_only:
         import json
         print(json.dumps(bench_overlap(), indent=1))
+    elif args.hetero_only:
+        import json
+        print(json.dumps(bench_hetero(), indent=1))
     elif args.sharing_only:
         import json
         print(json.dumps(bench_sharing(n_sessions=args.sessions), indent=1))

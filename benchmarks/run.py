@@ -4,8 +4,8 @@ by 1e6 into the us column; the derived field says what they mean).
 
 ``--serving`` aggregates the serving artifacts
 (results/bench/BENCH_step.json + BENCH_cluster.json, plus
-BENCH_sharing.json, BENCH_recurrent.json and BENCH_quant.json when
-present) into the
+BENCH_sharing.json, BENCH_recurrent.json, BENCH_quant.json and
+BENCH_hetero.json when present) into the
 top-level ``results/bench/BENCH_serving.json`` scorecard: steady-state TBT
 median/p99, the long-prompt-interference TBT bound, the async swap-in
 overlap profile (advisory-led residual stall must stay ~0), the
@@ -14,7 +14,10 @@ prefix-sharing footprint ratio (peak pages over the unshared cost for a
 recurrent-state profile (O(1) slot-blob swap bytes vs linear paged KV and
 the sessions/node headroom multiple, token-exact parity required), the
 quantized-KV-tier profile (in-place int8 session headroom over the fp
-baseline, kernel parity error, and the sim quantize-vs-swap A/B), cluster
+baseline, kernel parity error, and the sim quantize-vs-swap A/B), the
+heterogeneous-skew profile (1 long + 15 short decode lanes: skewed p99
+over a context-matched homogeneous baseline must stay <= 1.5x with zero
+measured compiles — the page-walk-elimination observable), cluster
 throughput, compile counts, and copied bytes — the one file CI uploads and
 gates (decode-p99-under-interference must not regress vs the committed
 copy; footprint ratio bounded absolutely)."""
@@ -71,6 +74,9 @@ def aggregate_serving() -> dict:
         if recurrent_f.exists() else None    # optional locally, like sharing
     quant_f = RESULTS / "BENCH_quant.json"
     quant = json.loads(quant_f.read_text()) if quant_f.exists() \
+        else None                            # optional locally, like sharing
+    hetero_f = RESULTS / "BENCH_hetero.json"
+    hetero = json.loads(hetero_f.read_text()) if hetero_f.exists() \
         else None                            # optional locally, like sharing
 
     cfgs = list(step["configs"].values())
@@ -159,6 +165,18 @@ def aggregate_serving() -> dict:
             sim_quantized_sessions=quant.get("sim_ab", {}).get(
                 "quantize_on", {}).get("quantized_sessions"),
         ),
+        hetero=None if hetero is None else dict(
+            long_len=hetero.get("long_len"),
+            p99_ratio=hetero.get("p99_ratio"),
+            p50_ratio=hetero.get("p50_ratio"),
+            skew_p99_ms=hetero.get("skew", {}).get("p99_ms"),
+            homog_p99_ms=hetero.get("homog", {}).get("p99_ms"),
+            dma_pages_per_step=hetero.get("skew",
+                                          {}).get("dma_pages_per_step"),
+            grid_over_fused=hetero.get("grid_over_fused"),
+            split_steps=hetero.get("skew", {}).get("split_steps"),
+            measured_compiles=hetero.get("measured_compiles"),
+        ),
         compile_counts=step.get("compile_counts", {}),
         copied_bytes=sum(c.get("copied_bytes", 0.0) for c in cfgs),
     )
@@ -182,9 +200,9 @@ def main() -> None:
 
     from benchmarks import fig_serving, fig_tokens
     from benchmarks.roofline_table import emit_roofline
-    from benchmarks.kernel_bench import (bench_kernels, bench_quant,
-                                         bench_recurrent, bench_sharing,
-                                         bench_step)
+    from benchmarks.kernel_bench import (bench_hetero, bench_kernels,
+                                         bench_quant, bench_recurrent,
+                                         bench_sharing, bench_step)
 
     t0 = time.time()
     sections = {
@@ -210,6 +228,7 @@ def main() -> None:
         "roofline": emit_roofline,
         "kernels": bench_kernels,
         "step": bench_step,
+        "hetero": bench_hetero,
         "sharing": bench_sharing,
         "recurrent": bench_recurrent,
         "quant": bench_quant,

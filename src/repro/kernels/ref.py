@@ -14,6 +14,14 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens):
     block_tables: (B, max_pages) int32    — page ids per sequence
     ctx_lens:     (B,) int32              — valid tokens per sequence
     returns:      (B, H, D)
+
+    Relevance contract (mirrors the Pallas kernel's DMA elision): only
+    positions < ctx_lens[b] — i.e. the lane's first ceil(ctx/page) table
+    columns — ever reach the softmax.  Table columns beyond that are
+    masked whatever they hold, so the last-valid-page padding the callers
+    use (which duplicates a page id across the row's tail) is exactly as
+    correct here as 0-padding: duplicated gather rows land at kpos >= ctx
+    and are dropped by the mask.
     """
     B, H, D = q.shape
     P, page, Hkv, _ = k_pages.shape
@@ -50,6 +58,14 @@ def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables,
                   bit (P,) int32; pages flagged quantized are dequantized
                   from the shadow pool, the rest read full precision
     returns:      (B, Sq, H, D)
+
+    Relevance contract (mirrors the kernel's clamped index maps): a KV
+    position contributes iff it is causally visible (qpos >= kpos) AND
+    < ctx_lens[b] — the same bound the kernel's per-lane page-count clamp
+    enforces at DMA granularity.  Table columns past ceil(ctx/page) are
+    therefore free to repeat the lane's last valid page id (the padding
+    the serving step emits so the kernel's copy elision fires): the
+    duplicated rows sit at kpos >= ctx and never survive the mask.
     """
     B, Sq, H, D = q.shape
     P, page, Hkv, _ = k_pages.shape

@@ -333,7 +333,12 @@ class DenseLM:
           tokens (a decode lane's pending token, or a chunk of prompt);
           their KV lands at absolute positions [q_offsets[b], ctx_lens[b]).
         k_pool/v_pool: (L, P, page, Hkv, D) stacked pools.
-        tables: (L, B, T) int32 block tables (0-padded).
+        tables: (L, B, T) int32 block tables.  Columns beyond a lane's own
+          pages must repeat the lane's LAST VALID page id (what
+          ``PagedAllocator.block_table`` emits) — padded columns are fully
+          compute-masked either way, but the constant tail is what lets
+          the attention kernel's clamped index maps elide the padded
+          walk's tile DMAs.
         q_offsets: (B,) traced int32 — tokens whose KV is already written.
         ctx_lens: (B,) traced int32 — valid tokens incl. this step's chunk
           (0 masks a padded lane out of attention entirely).

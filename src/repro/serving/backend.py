@@ -256,7 +256,8 @@ class SimBackend(Backend):
                   if ln.new_tokens > 0]
         decode = [ln for ln in lanes if ln.new_tokens == 0 and ln.final]
         compute = self.cost.mixed_step_time(
-            chunks, len(decode), sum(ln.cached for ln in decode))
+            chunks, len(decode), sum(ln.cached for ln in decode),
+            decode_ctx=[ln.cached for ln in decode])
         # residual stall for cached KV not yet HBM-resident (layer-wise);
         # lanes fetching concurrently overlap within the one fused step
         stall = max((self.mgr.kv_stall(ln.req.session_id, now, compute)
@@ -340,7 +341,8 @@ class RealBackend(Backend):
                  page_size: int = 8, kernel_mode: str = "auto",
                  spool_dir: Optional[str] = None, mgr=None,
                  trace_logits: bool = True, mesh=None,
-                 hbm_pages: Optional[int] = None):
+                 hbm_pages: Optional[int] = None,
+                 split_skew: float = 4.0):
         import jax
         import jax.numpy as jnp
 
@@ -364,6 +366,12 @@ class RealBackend(Backend):
         self.kernel_mode = serving_kernel_mode(kernel_mode,
                                                meshed=mesh is not None)
         self.trace_logits = trace_logits
+        # context-aware lane packing: when the bucketed table-width skew
+        # (widest lane's bucket over the median lane's bucket) reaches this
+        # ratio, step() splits the batch into two sub-dispatches so one
+        # resumed long session stops inflating Tb for every short decode
+        # lane.  <= 1 disables splitting (always one dispatch).
+        self.split_skew = float(split_skew)
         self.dtype = jnp.dtype(cfg.dtype)
         L, Hkv, D = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
         shape = (L, n_pages + 1, page_size, Hkv, D)
@@ -409,7 +417,9 @@ class RealBackend(Backend):
                           migrations_in=0, copied_bytes=0.0, disk_writes=0,
                           prefix_hits=0, shared_tokens=0, cow_forks=0,
                           quantized_pages=0, quant_dispatches=0,
-                          dequant_forks=0, admit_quantized=0)
+                          dequant_forks=0, admit_quantized=0,
+                          sub_dispatches=0, split_steps=0,
+                          dma_pages=0, grid_pages=0)
         self.logit_trace: List[Tuple[str, np.ndarray]] = []
 
     def compile_counts(self) -> Dict[str, int]:
@@ -1055,6 +1065,98 @@ class RealBackend(Backend):
             return self._plan_fits_now(lanes)
         return False
 
+    def _pack_lanes(self, widths: List[int]) -> List[np.ndarray]:
+        """Context-aware lane packing: lane indices grouped into the sub-
+        dispatches one engine step issues — normally ONE group (the fused
+        dispatch PRs 3-9 built), split into exactly TWO when the bucketed
+        table-width skew (widest lane's power-of-two bucket over the median
+        lane's) reaches ``split_skew``.  One resumed 4k-context session
+        then rides its own narrow dispatch instead of inflating Tb (and,
+        via the per-group Sq bucket, the query padding) for fifteen short
+        decode lanes.  The decision reads BUCKETED widths only, so a lane
+        growing within its bucket can never flip the split on and off
+        between steps: census keys stay on the same power-of-two lattice
+        and steady-state serving stays recompile-free."""
+        B = len(widths)
+        if B < 2 or self.split_skew <= 1.0:
+            return [np.arange(B)]
+        order = sorted(range(B), key=lambda i: widths[i])
+        tb_med = _bucket(max(widths[order[(B - 1) // 2]], 1))
+        tb_max = _bucket(max(widths[order[-1]], 1))
+        if tb_max < self.split_skew * tb_med:
+            return [np.arange(B)]
+        short = [i for i in order if _bucket(max(widths[i], 1)) <= tb_med]
+        long = [i for i in order if _bucket(max(widths[i], 1)) > tb_med]
+        return [np.asarray(short), np.asarray(long)]
+
+    def _dispatch_lanes(self, sids: List[str], ids_by_lane: List[List[int]],
+                        quant) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Assemble and run ONE bucketed ``step_paged`` dispatch over the
+        given lanes; returns (token ids (B,), logits (B, V) or None).
+        Pools are donated per dispatch and rethreaded through self, so two
+        sub-dispatches chain exactly like two engine steps would."""
+        import jax.numpy as jnp
+        L = self.cfg.n_layers
+        B = len(sids)
+        q_lens = [len(ids) for ids in ids_by_lane]
+        # tokens-per-step bucket: pure-decode groups sit at Sq = 1; chunked
+        # groups land on the power-of-two lattice.  No floor — the engine's
+        # token budget already controls the chunk-size lattice, and every
+        # lane in the group pays Sqb query rows, so padding small chunks up
+        # to 8 would tax the decode lanes riding the same dispatch
+        Sqb = _bucket(max(q_lens))
+        Bb = _bucket(B)                          # lane-count shape bucket
+        Tb = _bucket(max(len(self.alloc[0].seqs[s].pages) for s in sids))
+        ids_p = np.zeros((Bb, Sqb), np.int32)
+        qoff = np.zeros((Bb,), np.int32)
+        ctx = np.zeros((Bb,), np.int32)          # padded lanes: ctx 0 -> masked
+        last = np.zeros((Bb,), np.int32)
+        tables = np.zeros((L, Bb, Tb), np.int32)
+        # padded slots scatter into the trash page (index n_pages)
+        pg = np.full((L, Bb, Sqb), self.n_pages, np.int32)
+        off = np.zeros((L, Bb, Sqb), np.int32)
+        for i, (sid, ids) in enumerate(zip(sids, ids_by_lane)):
+            st = self.seqs[sid]
+            n = len(ids)
+            ids_p[i, :n] = ids
+            qoff[i] = st.n_kv
+            ctx[i] = st.n_kv + n
+            last[i] = n - 1
+            # one (L, w) page-id matrix per lane collapses the old
+            # per-layer Python loops into numpy gathers: the block-table
+            # fill and the KV slot mapping (same write positions in every
+            # layer) both read it
+            pages = np.asarray([self.alloc[l].seqs[sid].pages
+                                for l in range(L)], np.int32)
+            w = pages.shape[1]
+            tables[:, i, :w] = pages
+            # pad table columns with the lane's LAST VALID page id (never
+            # 0): the kernel's clamped index maps keep the block index
+            # constant across the tail, so the padded walk costs no DMA —
+            # see the paged_attention module docstring for the invariant
+            if w:
+                tables[:, i, w:] = pages[:, -1:]
+            pos = st.n_kv + np.arange(n)
+            pg[:, i, :n] = pages[:, pos // self.page_size]
+            off[:, i, :n] = pos % self.page_size
+        # page-walk accounting (per kv head): the elided kernel fetches
+        # each lane's own relevant pages; the grid still walks the full
+        # (Bb, Tb) bucket, compute-masked and DMA-elided
+        self.stats["dma_pages"] += int(
+            sum(-(-int(c) // self.page_size) for c in ctx[:B]))
+        self.stats["grid_pages"] += Bb * Tb
+        self.stats["sub_dispatches"] += 1
+        toks_dev, logits, self.k_pool, self.v_pool = self.model.step_paged(
+            self.params, ids_p, self.k_pool, self.v_pool, tables,
+            jnp.asarray(qoff), jnp.asarray(ctx), jnp.asarray(last), pg, off,
+            quant=quant, kernel_mode=self.kernel_mode,
+            pool_sharding=self._pool_sharding)
+        tok_np = np.asarray(toks_dev[:B])        # token ids only — no full-
+        lg_np = None                             # logits sync unless tracing
+        if self.trace_logits:
+            lg_np = np.asarray(logits[:B, :self.cfg.vocab])
+        return tok_np, lg_np
+
     def step(self, lanes, now) -> StepResult:
         import jax.numpy as jnp
         # reap ready transfers BEFORE the timed region: a pending persist's
@@ -1166,49 +1268,26 @@ class RealBackend(Backend):
         for sid, ids in zip(sids, ids_by_lane):
             self._extend_all(sid, len(ids))
 
-        L = self.cfg.n_layers
         B = len(lanes)
-        q_lens = [len(ids) for ids in ids_by_lane]
-        Sq = max(q_lens)
-        # tokens-per-step bucket: pure-decode steps sit at Sq = 1; chunked
-        # steps land on the power-of-two lattice.  No floor — the engine's
-        # token budget already controls the chunk-size lattice, and every
-        # lane in the batch pays Sqb query rows, so padding small chunks up
-        # to 8 would tax the decode lanes riding the same dispatch
-        Sqb = _bucket(Sq)
-        Bb = _bucket(B)                          # lane-count shape bucket
-        Tb = _bucket(max(len(self.alloc[l].seqs[s].pages)
-                         for l in range(L) for s in sids))
-        ids_p = np.zeros((Bb, Sqb), np.int32)
-        qoff = np.zeros((Bb,), np.int32)
-        ctx = np.zeros((Bb,), np.int32)          # padded lanes: ctx 0 -> masked
-        last = np.zeros((Bb,), np.int32)
-        tables = np.zeros((L, Bb, Tb), np.int32)
-        # padded slots scatter into the trash page (index n_pages)
-        pg = np.full((L, Bb, Sqb), self.n_pages, np.int32)
-        off = np.zeros((L, Bb, Sqb), np.int32)
-        for l in range(L):
-            tables[l, :B] = self.alloc[l].batch_block_tables(sids, Tb)
-        for i, (sid, ids) in enumerate(zip(sids, ids_by_lane)):
-            st = self.seqs[sid]
-            n = len(ids)
-            ids_p[i, :n] = ids
-            qoff[i] = st.n_kv
-            ctx[i] = st.n_kv + n
-            last[i] = n - 1
-            for l in range(L):
-                p, o = self._slots(l, sid, st.n_kv, n)
-                pg[l, i, :n] = p
-                off[l, i, :n] = o
-        toks_dev, logits, self.k_pool, self.v_pool = self.model.step_paged(
-            self.params, ids_p, self.k_pool, self.v_pool, tables,
-            jnp.asarray(qoff), jnp.asarray(ctx), jnp.asarray(last), pg, off,
-            quant=self._quant_args(), kernel_mode=self.kernel_mode,
-            pool_sharding=self._pool_sharding)
-        tok_np = np.asarray(toks_dev[:B])        # token ids only — no full-
-        lg_np = None                             # logits sync unless tracing
-        if self.trace_logits:
-            lg_np = np.asarray(logits[:B, :self.cfg.vocab])
+        # per-lane table widths from LAYER 0 ONLY: _ensure_resident and
+        # _extend_all grow every layer in lockstep, so layer 0's page count
+        # is THE page count for a session (page ids differ per layer,
+        # counts never do)
+        widths = [len(self.alloc[0].seqs[s].pages) for s in sids]
+        groups = self._pack_lanes(widths)
+        if len(groups) > 1:
+            self.stats["split_steps"] += 1
+        quant = self._quant_args()   # step_paged never donates the shadow
+        tok_np = np.zeros((B,), np.int32)     # pools, safe to reuse across
+        lg_np = (np.zeros((B, self.cfg.vocab), np.float32)  # sub-dispatches
+                 if self.trace_logits else None)
+        for g in groups:
+            toks, lg = self._dispatch_lanes([sids[i] for i in g],
+                                            [ids_by_lane[i] for i in g],
+                                            quant)
+            tok_np[g] = toks
+            if lg_np is not None:
+                lg_np[g] = lg
         any_decode = False
         for i, (ln, ids) in enumerate(zip(lanes, ids_by_lane)):
             st = self.seqs[ln.req.session_id]

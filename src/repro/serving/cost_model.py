@@ -43,6 +43,11 @@ class CostModel:
         # read from one source of truth; 2 = the bf16/fp16 serving default
         self.kv_dtype_bytes = kv_dtype_bytes
         self.quant_dtype_bytes = quant_dtype_bytes
+        # attention-read granularity: the serving kernels fetch KV one page
+        # at a time, so per-lane decode reads round up to this many tokens
+        # (matches the RealBackend page_size default; drivers that size
+        # pages differently can overwrite it after construction)
+        self.attn_page_size = 8
         dtype_bytes = kv_dtype_bytes
         if c.family in ("hybrid", "mamba2"):
             # mamba2 was previously missing here and fell through to the
@@ -142,21 +147,40 @@ class CostModel:
             * self.cfg.q_dim
         return flops / (hw.chips_per_replica * hw.peak_flops * hw.mfu_prefill)
 
-    def decode_step_time(self, batch: int, total_ctx_tokens: int) -> float:
+    def decode_kv_read_tokens(self, batch: int, total_ctx_tokens: int,
+                              decode_ctx=None) -> float:
+        """KV tokens one decode iteration reads from HBM.
+
+        With ``decode_ctx`` (the per-lane context lengths) the charge is
+        the SUMMED PER-LANE RELEVANT PAGES — each lane's own context,
+        windowed then rounded up to page granularity — which is exactly
+        what the DMA-elided kernel fetches: a shared ``maxp``-wide table
+        bucket costs grid steps, never bandwidth, so one 4k-context lane
+        no longer prices every short lane at ``B x maxp``.  Without the
+        per-lane breakdown (aggregate-only callers) the old windowed-sum
+        approximation stands."""
+        if decode_ctx is None:
+            return min(total_ctx_tokens, batch * self.kv_window)
+        p = self.attn_page_size
+        return sum(-(-min(c, self.kv_window) // p) * p for c in decode_ctx)
+
+    def decode_step_time(self, batch: int, total_ctx_tokens: int,
+                         decode_ctx=None) -> float:
         """max(compute, memory) per single-token iteration for the batch."""
         self._ensure_params()
         hw = self.hw
         flops = 2 * self.n_active * batch
         t_c = flops / (hw.chips_per_replica * hw.peak_flops * 0.5)
         kv = (self.fixed_state_bytes * batch
-              + min(total_ctx_tokens, batch * self.kv_window)
+              + self.decode_kv_read_tokens(batch, total_ctx_tokens,
+                                           decode_ctx)
               * self.kv_bytes_token)
         t_m = (self.param_bytes() + kv) / (
             hw.chips_per_replica * hw.hbm_bw * hw.mfu_decode_mem)
         return max(t_c, t_m)
 
     def mixed_step_time(self, chunks, n_decode: int,
-                        decode_ctx_tokens: int) -> float:
+                        decode_ctx_tokens: int, decode_ctx=None) -> float:
         """ONE fused mixed iteration: prefill chunks + batched decode lanes
         execute as a single dispatch.  ``chunks`` is a list of
         (new_tokens, cached_tokens) pairs — a long prompt split across
@@ -164,10 +188,15 @@ class CostModel:
         priced against the context it actually has at that step.  The model
         degenerates exactly to ``prefill_time`` / ``decode_step_time`` when
         one side is empty, which keeps sim numbers comparable across the
-        split->unified serving-step change."""
+        split->unified serving-step change.  ``decode_ctx`` (per-lane
+        decode context lengths) switches the attention charge to summed
+        per-lane relevant pages — the real backend's post-elision cost —
+        so SimBackend and the scheduler arithmetic see the same speedup
+        the kernels measure."""
         t = sum(self.prefill_time(n, c) for n, c in chunks)
         if n_decode > 0:
-            t += self.decode_step_time(n_decode, decode_ctx_tokens)
+            t += self.decode_step_time(n_decode, decode_ctx_tokens,
+                                       decode_ctx)
         return t
 
     # -- transfers ---------------------------------------------------------------------

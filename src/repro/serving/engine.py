@@ -142,6 +142,13 @@ class NodeEngine:
         if not plan:
             return 0.0
 
+        # context-aware lane ordering: widest context first, so the
+        # backend's skew split (at most two sub-dispatches on the bucket
+        # lattice) cuts the sorted order at one point and the grouping is
+        # deterministic across steps — per-lane results are keyed by lane,
+        # never by position, so reordering is free
+        plan.sort(key=lambda e: -(e[1].cached + e[1].new_tokens))
+
         # 3) ONE fused mixed dispatch (with pressure handling)
         res = self._step_with_pressure(plan, now)
         if res is None:

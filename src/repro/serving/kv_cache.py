@@ -292,10 +292,18 @@ class PagedAllocator:
 
     def block_table(self, seq_id: str, max_pages: Optional[int] = None
                     ) -> np.ndarray:
-        """Padded int32 block table row for the paged_attention kernel."""
+        """Padded int32 block table row for the paged_attention kernel.
+
+        Columns beyond the row's own pages repeat the LAST VALID page id
+        (not 0): the kernel's clamped index maps then see an unchanged
+        block index across the padded tail, so the tile copy is elided
+        instead of re-fetching page 0 once per lane.  Padded columns are
+        still fully compute-masked (kpos >= ctx), so this is purely a DMA
+        optimisation — rows with no pages keep the zero fill."""
         s = self.seqs[seq_id]
         width = max_pages or len(s.pages)
-        out = np.zeros((width,), np.int32)
+        fill = s.pages[-1] if s.pages else 0
+        out = np.full((width,), fill, np.int32)
         out[:len(s.pages)] = s.pages
         return out
 

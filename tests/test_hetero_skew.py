@@ -1,0 +1,302 @@
+"""Heterogeneous-skew batches: one resumed long-context lane riding many
+short decode lanes through the unified serving step.
+
+This is SYMPHONY's signature batch shape — multi-turn sessions resume with
+their long KV histories intact next to fresh short sessions — and the page-
+walk-elimination work must keep it both CHEAP and INVISIBLE:
+
+* context-aware lane packing splits a skewed step into at most two
+  sub-dispatches on the power-of-two bucket lattice (the long lane stops
+  inflating the table-width bucket for every short lane), and the split
+  decision reads bucketed widths only, so steady-state serving stays
+  recompile-free;
+* results are token-exact vs the dense reference in every mode — MHA and
+  GQA, fp and quantized pages, a chunked prefill lane mixed in, across
+  bucket boundaries, and on a tp=2 mesh — whether or not the split fires;
+* block tables pad with the lane's last valid page id (the DMA-elision
+  invariant) and the backend's page-walk counters show per-lane-
+  proportional fetches, not bucket-proportional.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.advisory import InferenceRequest
+from repro.core.node_manager import NodeManager
+from repro.models.registry import get_model
+from repro.serving.backend import RealBackend, _bucket
+from repro.serving.cost_model import CostModel, HardwareSpec
+from repro.serving.engine import NodeEngine
+from repro.serving.kv_cache import PagedAllocator
+
+GEN = 4
+LONG = 150          # long lane's prompt: ~19 pages, Tb bucket 32
+SHORTS = [6, 7, 8, 9, 10, 11, 12, 9, 8, 7, 6, 10, 11, 12, 9]  # 1-2 pages
+_CACHE = {}
+
+needs2 = pytest.mark.skipif(jax.device_count() < 2,
+                            reason="needs 2 forced host devices")
+
+
+def _model(kind: str, seed: int = 0):
+    if (kind, seed) not in _CACHE:
+        n_kv = dict(mha=4, gqa=2)[kind]
+        cfg = get_config("llama3-8b").reduced(dtype="float32",
+                                              n_kv_heads=n_kv)
+        model = get_model(cfg)
+        params = model.init(jax.random.key(seed))
+        _CACHE[(kind, seed)] = (cfg, model, params)
+    return _CACHE[(kind, seed)]
+
+
+def _engine(kind: str, n_pages: int = 96, max_batch: int = 16,
+            token_budget: int = 512, tp=None, **bkw):
+    cfg, model, params = _model(kind)
+    cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+    cost.set_param_count(model.param_count())
+    mgr = NodeManager(0, cfg, cost)
+    mesh = None
+    if tp is not None:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(tp=tp)
+    be = RealBackend(cfg, model, params, mgr=mgr, n_pages=n_pages,
+                     page_size=8, mesh=mesh, **bkw)
+    eng = NodeEngine(0, cfg, cost, mgr, max_batch=max_batch, backend=be,
+                     token_budget=token_budget)
+    return cfg, model, params, be, eng
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return {f"s{i}": list(map(int, rng.integers(0, cfg.vocab, n)))
+            for i, n in enumerate(lens)}
+
+
+def _dense_reference(cfg, model, params, prompt, gen=GEN):
+    """One session's greedy continuation, computed densely in isolation —
+    lanes never interact numerically, so this is per-session ground truth
+    for any batch composition."""
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    logits, cache = prefill(params, jnp.asarray([prompt], jnp.int32))
+    cache = model.grow_cache(cache, gen)
+    out = []
+    for _ in range(gen):
+        nxt = jnp.argmax(logits[0, :cfg.vocab])[None].astype(jnp.int32)
+        out.append(int(nxt[0]))
+        logits, cache = decode(params, cache, nxt)
+    return out
+
+
+def _serve_all(eng, prompts, gen=GEN):
+    """Submit every session at t=0 and run the node to completion."""
+    reqs = {}
+    for sid, ids in prompts.items():
+        reqs[sid] = InferenceRequest(session_id=sid,
+                                     prompt_tokens=len(ids),
+                                     max_new_tokens=gen,
+                                     prompt_ids=list(ids))
+        eng.submit(reqs[sid])
+    now = 0.0
+    while eng.waiting or eng.running:
+        now += max(eng.step(now), 1e-9)
+    return {sid: r.output_ids for sid, r in reqs.items()}
+
+
+# ---------------------------------------------------------------------------
+# packing policy (pure unit)
+# ---------------------------------------------------------------------------
+
+def test_pack_lanes_policy():
+    _, _, _, be, _ = _engine("mha")
+    # skewed: 15 short lanes + 1 long -> exactly two groups, shorts together
+    widths = [2] * 15 + [30]
+    groups = be._pack_lanes(widths)
+    assert len(groups) == 2
+    assert sorted(groups[0]) == list(range(15)) and list(groups[1]) == [15]
+    # union is always a permutation of all lanes
+    assert sorted(np.concatenate(groups).tolist()) == list(range(16))
+    # homogeneous batches never split (short or long)
+    assert len(be._pack_lanes([2] * 16)) == 1
+    assert len(be._pack_lanes([30] * 16)) == 1
+    # sub-threshold skew stays fused: bucket(7)=8 < 4 * bucket(2)=2 is
+    # false only at >= 4x, and 8 == 4*2 splits (>= threshold)
+    assert len(be._pack_lanes([2] * 15 + [4])) == 1
+    assert len(be._pack_lanes([2] * 15 + [8])) == 2
+    # the decision reads BUCKETED widths: growth within a bucket can never
+    # flip the split between steps
+    assert len(be._pack_lanes([2] * 15 + [17])) == \
+        len(be._pack_lanes([2] * 15 + [31]))
+    # single lane / disabled skew -> one group
+    assert len(be._pack_lanes([30])) == 1
+    be.split_skew = 1.0
+    assert len(be._pack_lanes([2] * 15 + [30])) == 1
+
+
+def test_block_table_pads_with_last_valid_page():
+    a = PagedAllocator(n_pages=16, page_size=4)
+    a.allocate("s", 10)                       # 3 pages
+    tbl = a.block_table("s", 8)
+    assert (tbl[:3] == np.asarray(a.seqs["s"].pages)).all()
+    assert (tbl[3:] == tbl[2]).all(), "padding must repeat the last page"
+    a.allocate("empty", 0)
+    assert (a.block_table("empty", 4) == 0).all()
+    stacked = a.batch_block_tables(["s", "empty"], 8)
+    assert (stacked[0] == tbl).all() and (stacked[1] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# token-exact parity, skewed batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["mha", "gqa"])
+def test_hetero_skew_token_exact(kind):
+    """1 long lane + 15 short lanes served concurrently: every session's
+    tokens exactly equal its dense reference, the skew split actually
+    fires, and the page-walk counter stays per-lane-proportional."""
+    cfg, model, params, be, eng = _engine(kind)
+    prompts = _prompts(cfg, [LONG] + SHORTS)
+    got = _serve_all(eng, prompts)
+    for sid, ids in prompts.items():
+        want = _dense_reference(cfg, model, params, ids)
+        assert got[sid] == want, f"{sid} diverged ({kind})"
+    assert be.stats["split_steps"] > 0, "skew split never fired"
+    assert be.stats["sub_dispatches"] > be.stats["decode_steps"]
+    # page-walk accounting: the kernel never fetches more than the walked
+    # grid, and the SPLIT grid is a small fraction of what one fused
+    # dispatch would walk (every lane padded to the long lane's bucket)
+    assert be.stats["dma_pages"] <= be.stats["grid_pages"]
+    n_dispatch_steps = be.stats["sub_dispatches"] - be.stats["split_steps"]
+    fused_walk = n_dispatch_steps * _bucket(16) * _bucket(LONG // 8 + 2)
+    assert be.stats["grid_pages"] < 0.3 * fused_walk
+
+
+@pytest.mark.parametrize("n_short", [7, 15])
+def test_hetero_across_lane_bucket_boundary(n_short):
+    """Same skew on both sides of the Bb lane-count bucket boundary
+    (8 lanes -> Bb 8, 16 lanes -> Bb 16): packing and parity hold."""
+    cfg, model, params, be, eng = _engine("mha")
+    prompts = _prompts(cfg, [LONG] + SHORTS[:n_short], seed=5)
+    got = _serve_all(eng, prompts)
+    for sid, ids in prompts.items():
+        assert got[sid] == _dense_reference(cfg, model, params, ids)
+    assert be.stats["split_steps"] > 0
+
+
+def test_hetero_chunked_prefill_lane_mixed_in():
+    """A small token budget makes the long prompt CHUNK through the same
+    steps the short lanes decode in; the split groups the chunk lane with
+    its width-peers and every lane stays token-exact."""
+    cfg, model, params, be, eng = _engine("mha", token_budget=24)
+    prompts = _prompts(cfg, [LONG] + SHORTS, seed=7)
+    got = _serve_all(eng, prompts)
+    for sid, ids in prompts.items():
+        assert got[sid] == _dense_reference(cfg, model, params, ids)
+    assert eng.stats["chunks"] > 2, "long prompt never chunked"
+    assert be.stats["split_steps"] > 0
+
+
+def test_hetero_quantized_long_lane():
+    """The long session's KV compresses to int8 pages between turns; its
+    decode rides the skewed batch through the quant kernel path.  Short
+    fp lanes must stay BIT-exact (another lane's precision cannot leak
+    across lanes) and the long lane's argmax survives int8 noise at smoke
+    scale."""
+    cfg, model, params, be, eng = _engine("mha")
+    long_ids = _prompts(cfg, [LONG], seed=9)["s0"]
+    # turn 1: long session alone, then compress its full pages
+    got1 = _serve_all(eng, {"long": long_ids})
+    assert be.quantize_session("long") > 0
+    # turn 2: shorts arrive; the long lane decodes from quantized pages
+    shorts = _prompts(cfg, SHORTS, seed=11)
+    follow = [int(t) for t in got1["long"]] + \
+        _prompts(cfg, [5], seed=13)["s0"]
+    reqs = {"long": InferenceRequest(
+        session_id="long", prompt_tokens=len(follow), max_new_tokens=GEN,
+        prompt_ids=list(follow), cached_tokens=be.session_tokens("long"))}
+    for sid, ids in shorts.items():
+        reqs[sid] = InferenceRequest(session_id=sid, prompt_tokens=len(ids),
+                                     max_new_tokens=GEN,
+                                     prompt_ids=list(ids))
+    for r in reqs.values():
+        eng.submit(r)
+    now = 0.0
+    while eng.waiting or eng.running:
+        now += max(eng.step(now), 1e-9)
+    for sid, ids in shorts.items():
+        want = _dense_reference(cfg, model, params, ids)
+        assert reqs[sid].output_ids == want, \
+            f"quantized neighbor perturbed fp lane {sid}"
+    assert be._quant_active and len(reqs["long"].output_ids) == GEN
+    assert be.stats["split_steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# census: splitting stays recompile-free at steady state
+# ---------------------------------------------------------------------------
+
+def test_split_steady_state_zero_compile():
+    """Serving the identical skewed scenario twice (fresh backend, shared
+    model jit caches) must add ZERO new census entries on the second pass:
+    the split's sub-dispatch shapes live on the same power-of-two bucket
+    lattice as everything else."""
+    cfg, model, params, be1, eng1 = _engine("mha")
+    prompts = _prompts(cfg, [LONG] + SHORTS, seed=17)
+    _serve_all(eng1, prompts)
+    assert be1.stats["split_steps"] > 0
+    warm = sum(be1.compile_counts().values())
+    _, _, _, be2, eng2 = _engine("mha")       # same model object -> same jits
+    _serve_all(eng2, prompts)
+    assert be2.stats["split_steps"] > 0
+    assert sum(be2.compile_counts().values()) == warm, \
+        "sub-dispatch splitting added steady-state compiles"
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel mesh
+# ---------------------------------------------------------------------------
+
+@needs2
+def test_hetero_skew_tp2_token_exact():
+    """The skewed batch on a tp=2 mesh: sub-dispatch splitting composes
+    with sharded dispatch and stays token-exact vs the dense reference."""
+    cfg, model, params, be, eng = _engine("gqa", tp=2)
+    prompts = _prompts(cfg, [64] + SHORTS[:7], seed=19)
+    got = _serve_all(eng, prompts)
+    for sid, ids in prompts.items():
+        assert got[sid] == _dense_reference(cfg, model, params, ids)
+    assert be.stats["split_steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# cost-model parity
+# ---------------------------------------------------------------------------
+
+def test_cost_model_charges_per_lane_relevant_pages():
+    """mixed_step_time with per-lane contexts prices the skewed batch by
+    summed relevant pages: adding one long lane to 15 short lanes must
+    cost ~the long lane's own pages, NOT reprice every short lane at the
+    long lane's width."""
+    cfg, _, _ = _model("mha")
+    cost = CostModel(cfg, HardwareSpec(chips_per_replica=1))
+    cost.set_param_count(10_000_000)
+    short, long_ = [16] * 15, 4096
+    base = cost.mixed_step_time([], 15, sum(short), decode_ctx=short)
+    skew = cost.mixed_step_time([], 16, sum(short) + long_,
+                                decode_ctx=short + [long_])
+    padded = cost.mixed_step_time([], 16, 16 * long_,
+                                  decode_ctx=[long_] * 16)
+    # the skewed batch sits near the homogeneous-short cost, far from the
+    # all-padded-to-maxp cost the pre-elision kernel paid
+    assert skew < base + 1.1 * (padded - base) / 16 + 1e-12
+    # page rounding: per-lane charge rounds UP to page granularity
+    p = cost.attn_page_size
+    t1 = cost.decode_kv_read_tokens(1, 1, decode_ctx=[1])
+    assert t1 == p
+    assert cost.decode_kv_read_tokens(2, p + 1 + p,
+                                      decode_ctx=[p + 1, p]) == 3 * p
+    # aggregate-only callers keep the old windowed-sum behaviour
+    assert cost.decode_kv_read_tokens(4, 100) == 100
